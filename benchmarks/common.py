@@ -1,0 +1,92 @@
+"""Shared benchmark plumbing: the small SGD problem used for accuracy-axis
+experiments (CIFAR-scale stand-in, see DESIGN.md §7) and CSV/JSON helpers."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RunConfig
+from repro.data.synthetic import TeacherClassification
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_json(name: str, data) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+    return path
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """CSV row: name,value,derived."""
+    print(f"{name},{value},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# MLP learner on the teacher-classification task (the paper's CNN stand-in)
+# ---------------------------------------------------------------------------
+class MLPProblem:
+    """2-layer MLP trained on TeacherClassification — the accuracy-axis
+    vehicle for Figs. 5-7 / Tables 2-4 (non-convex, overfits, LR-sensitive:
+    the properties the paper's claims depend on)."""
+
+    def __init__(self, hidden: int = 64, task: TeacherClassification = None,
+                 seed: int = 0):
+        self.task = task or TeacherClassification()
+        self.hidden = hidden
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        nf, nc = self.task.n_features, self.task.n_classes
+        self.init = {
+            "w1": jax.random.normal(k1, (nf, hidden)) / np.sqrt(nf),
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, nc)) / np.sqrt(hidden),
+            "b2": jnp.zeros((nc,)),
+        }
+        self._grad = jax.jit(jax.grad(self.loss))
+        self._test_err = jax.jit(self._test_err_impl)
+
+    def loss(self, p, batch):
+        x, y = batch
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - ll)
+
+    def _test_err_impl(self, p):
+        x, y = self.task.x_test, self.task.y_test
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        pred = jnp.argmax(h @ p["w2"] + p["b2"], axis=-1)
+        return 1.0 - jnp.mean((pred == y).astype(jnp.float32))
+
+    def grad_fn(self, p, batch):
+        return self._grad(p, batch)
+
+    def batch_fn_for(self, mu: int, seed: int = 0) -> Callable:
+        def fn(learner: int, step: int):
+            x, y = self.task.minibatch(learner, step, mu, seed=seed)
+            return jnp.asarray(x), jnp.asarray(y)
+        return fn
+
+    def test_error(self, p) -> float:
+        return float(self._test_err(p))
+
+    def eval_fn(self, p) -> Dict[str, float]:
+        return {"test_error": self.test_error(p)}
+
+
+def updates_for_epochs(epochs: int, mu: int, lam: int,
+                       dataset: int) -> int:
+    """Weight updates s.t. total samples == epochs·dataset (softsync counts
+    c·μ samples/update; hardsync λ·μ)."""
+    return max(1, int(epochs * dataset / (mu * lam)))

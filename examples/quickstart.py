@@ -1,0 +1,43 @@
+"""Quickstart: train a small LM with the paper's n-softsync protocol and
+staleness-modulated learning rate, then generate from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig
+from repro.core import simulate_measure
+from repro.serve.engine import generate
+from repro.train.loop import train
+
+
+def main():
+    cfg = ModelConfig(name="quickstart-lm", family="dense", n_layers=4,
+                      d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                      vocab_size=128, qk_norm=True)
+    run = RunConfig(protocol="softsync", n_softsync=4, n_learners=8,
+                    minibatch=2, base_lr=0.02, lr_policy="staleness_inverse",
+                    optimizer="momentum", attn_q_chunk=64, attn_kv_chunk=64)
+
+    # 1. the paper's staleness bookkeeping for this configuration
+    meas = simulate_measure(run, steps=500)
+    print(f"[protocol] n-softsync n={run.n_softsync}, λ={run.n_learners}, "
+          f"c={run.gradients_per_update} gradients/update")
+    print(f"[staleness] ⟨σ⟩={meas.clock_log.mean_staleness():.2f} "
+          f"(Eq.2), max={meas.clock_log.all_staleness_values().max():.0f} "
+          f"≤ 2n={2 * run.n_softsync}")
+    print(f"[lr] α = α₀/⟨σ⟩ = {run.learning_rate():.5f} (Eq. 6)")
+
+    # 2. train with the round-based softsync engine
+    res = train(cfg, run, steps=150, batch=16, seq=64, eval_every=25,
+                log=lambda s: print("[train]", s))
+
+    # 3. serve: greedy generation with the KV-cache engine
+    prompt = jnp.zeros((2, 8), jnp.int32)
+    out = generate(cfg, run, res.params, prompt, max_new_tokens=12)
+    print("[generate]", out.tolist())
+
+
+if __name__ == "__main__":
+    main()

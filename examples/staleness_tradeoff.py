@@ -1,0 +1,61 @@
+"""(σ, μ, λ) tradeoff mini-study — the paper's core experiment on a laptop.
+
+Sweeps protocols and mini-batch sizes with the event-driven PS simulator on
+the teacher-classification task and prints the tradeoff table the paper
+plots in Figs. 6/7 (error vs time), including the μλ = constant rule.
+
+    PYTHONPATH=src python examples/staleness_tradeoff.py
+"""
+
+import numpy as np
+
+from benchmarks.common import MLPProblem, updates_for_epochs
+from repro.config import RunConfig
+from repro.core import tradeoff as to
+from repro.core.simulator import simulate
+
+
+def main():
+    prob = MLPProblem()
+    hw = to.calibrate_to_baseline()
+    epochs = 8
+    print(f"{'config':<38} {'test err':>9} {'time(model)':>12} "
+          f"{'<sigma>':>8}")
+    rows = []
+    for proto, n_of, mu, lam in [
+        ("hardsync", lambda l: 1, 128, 1),       # the paper's baseline
+        ("hardsync", lambda l: 1, 128, 30),
+        ("hardsync", lambda l: 1, 4, 30),
+        ("softsync", lambda l: 1, 128, 30),      # 1-softsync
+        ("softsync", lambda l: 1, 4, 30),
+        ("softsync", lambda l: l, 128, 30),      # λ-softsync (≈ async)
+        ("softsync", lambda l: l, 4, 30),
+    ]:
+        n = n_of(lam)
+        policy = "sqrt_scale" if proto == "hardsync" else "staleness_inverse"
+        cfg = RunConfig(protocol=proto, n_softsync=n, n_learners=lam,
+                        minibatch=mu, base_lr=0.35, lr_policy=policy,
+                        ref_batch=128, optimizer="sgd", seed=1)
+        steps = updates_for_epochs(epochs, mu, cfg.gradients_per_update,
+                                   prob.task.n_train)
+        res = simulate(cfg, steps=steps, grad_fn=prob.grad_fn,
+                       init_params=prob.init,
+                       batch_fn=prob.batch_fn_for(mu))
+        err = prob.test_error(res.params)
+        t = to.training_time(
+            "base", proto, mu, lam, hw,
+            to.WorkloadModel(dataset_size=prob.task.n_train, epochs=epochs))
+        sig = res.clock_log.mean_staleness()
+        label = f"{proto}(n={n}) mu={mu} lam={lam}"
+        print(f"{label:<38} {err:>9.4f} {t:>11.0f}s {sig:>8.2f}")
+        rows.append((mu * lam, err))
+
+    print("\nμλ = constant rule: error grouped by μλ product")
+    for prod in sorted({p for p, _ in rows}):
+        errs = [e for p, e in rows if p == prod]
+        print(f"  μλ={prod:<6} errors: "
+              + ", ".join(f"{e:.4f}" for e in errs))
+
+
+if __name__ == "__main__":
+    main()

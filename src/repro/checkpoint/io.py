@@ -1,0 +1,63 @@
+"""Pytree checkpointing without external dependencies (npz-based).
+
+Flattens a pytree of arrays to ``key.path/like/this -> array`` entries in a
+compressed ``.npz``, plus a tiny JSON manifest for non-array leaves (step
+counters, RNG keys).  Restore rebuilds against a template pytree so dtypes
+and structure are validated on load.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in ("bfloat16", "float16"):
+            arr = arr.astype(np.float32)   # fp32 master copy on disk
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, state, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(state)
+    np.savez_compressed(path, **flat)
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"step": step, "keys": sorted(flat)}, f)
+
+
+def load_checkpoint(path: str, template) -> Tuple[Any, int]:
+    """Restore into the structure of ``template``; returns (state, step)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    meta_path = path.replace(".npz", "") + ".npz.meta.json"
+    if not os.path.exists(meta_path):
+        meta_path = path + ".meta.json"
+    step = 0
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            step = json.load(f).get("step", 0)
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path_elems, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_elems)
+        if key not in data:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = jax.numpy.asarray(data[key])
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

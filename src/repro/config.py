@@ -1,0 +1,342 @@
+"""Configuration system for the repro framework.
+
+Two levels of config:
+
+* :class:`ModelConfig` — architecture hyperparameters, covering all six
+  assigned families (dense / moe / ssm / hybrid / vlm / audio).  A model is
+  described as a *repeating unit* of blocks (``block_pattern``) stacked
+  ``n_units`` times; parameters for the units are stacked on a leading axis
+  and the forward pass scans over them (``jax.lax.scan``) so that HLO size is
+  independent of depth.
+
+* :class:`RunConfig` — everything about a run that is not the model:
+  synchronization protocol (the paper's contribution), learning-rate policy,
+  mesh/sharding choices, micro-batching, data shape.
+
+Configs are plain frozen dataclasses; ``src/repro/configs/<arch>.py`` each
+export a ``CONFIG`` built from these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Block types that can appear inside a repeating unit.
+# ---------------------------------------------------------------------------
+BLOCK_ATTN = "attn"                      # attention + dense MLP
+BLOCK_MOE = "moe"                        # attention + mixture-of-experts MLP
+BLOCK_MOE_DENSE_RESIDUAL = "moe_dense"   # attention + (dense MLP ∥ MoE)  [arctic]
+BLOCK_MAMBA = "mamba"                    # Mamba2 SSD block
+BLOCK_RWKV = "rwkv"                      # RWKV6 (Finch) block
+BLOCK_SHARED_ATTN = "shared_attn"        # weight-shared attention block [zamba2]
+
+VALID_BLOCKS = {
+    BLOCK_ATTN,
+    BLOCK_MOE,
+    BLOCK_MOE_DENSE_RESIDUAL,
+    BLOCK_MAMBA,
+    BLOCK_RWKV,
+    BLOCK_SHARED_ATTN,
+}
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.  See src/repro/configs/ for instances."""
+
+    name: str
+    family: str                           # one of FAMILIES
+    # --- transformer spine -------------------------------------------------
+    n_layers: int                         # total layer count (for bookkeeping)
+    d_model: int
+    n_heads: int                          # query heads (0 for attn-free)
+    n_kv_heads: int                       # GQA KV heads
+    d_ff: int
+    vocab_size: int
+    block_pattern: Tuple[str, ...] = (BLOCK_ATTN,)
+    n_units: int = 0                      # stacked repeats of block_pattern
+    d_head: int = 0                       # 0 -> d_model // n_heads
+    # --- attention flavour --------------------------------------------------
+    causal: bool = True                   # False for encoder-only (audio)
+    qk_norm: bool = False                 # qwen3
+    qkv_bias: bool = False                # qwen2
+    rope_theta: float = 1e4
+    sliding_window: int = 0               # 0 = full attention; >0 = window size
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                     # 0 -> d_ff
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+    # --- SSM (Mamba2) -------------------------------------------------------
+    ssm_state: int = 0                    # N, state dim per head
+    ssm_expand: int = 2                   # d_inner = expand * d_model
+    ssm_head_dim: int = 64                # P
+    ssm_chunk: int = 256                  # chunk length for SSD scan
+    ssm_conv: int = 4                     # depthwise conv width
+    # --- RWKV6 --------------------------------------------------------------
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 256
+    # --- modality frontend (stub per spec) ----------------------------------
+    frontend: str = "none"                # "none" | "audio" | "vision"
+    n_prefix_embeds: int = 0              # vision patches / audio frames prepended
+    # --- numerics ------------------------------------------------------------
+    dtype: str = "bfloat16"               # compute/param dtype
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- provenance ----------------------------------------------------------
+    source: str = ""                      # paper / model-card citation
+
+    # -- derived -------------------------------------------------------------
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        for b in self.block_pattern:
+            if b not in VALID_BLOCKS:
+                raise ValueError(f"unknown block type {b!r}")
+        if self.n_units == 0:
+            object.__setattr__(
+                self, "n_units",
+                max(1, self.n_layers // max(1, len(self.block_pattern))))
+        if self.d_head == 0 and self.n_heads:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    @property
+    def effective_layers(self) -> int:
+        return self.n_units * len(self.block_pattern)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so the embedding/head shard over
+        the model axis (standard practice; padded ids are never emitted by
+        the data pipeline)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def has_attention(self) -> bool:
+        return any(b in (BLOCK_ATTN, BLOCK_MOE, BLOCK_MOE_DENSE_RESIDUAL,
+                         BLOCK_SHARED_ATTN) for b in self.block_pattern)
+
+    @property
+    def attention_free(self) -> bool:
+        return not self.has_attention
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this model run very long contexts (long_500k)?"""
+        if not self.has_attention:
+            return True
+        return self.sliding_window > 0
+
+    @property
+    def encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def rwkv_n_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    # -- analytic parameter count (used by roofline & runtime model) --------
+    def param_count(self) -> int:
+        M, F, V = self.d_model, self.d_ff, self.vocab_size
+        H, KV, Dh = self.n_heads, self.n_kv_heads, self.d_head
+        total = V * M                                    # embedding
+        if not self.tie_embeddings:
+            total += V * M                               # lm head
+        per_unit = 0
+        for b in self.block_pattern:
+            if b in (BLOCK_ATTN, BLOCK_MOE, BLOCK_MOE_DENSE_RESIDUAL,
+                     BLOCK_SHARED_ATTN):
+                attn = M * (H * Dh) + 2 * M * (KV * Dh) + (H * Dh) * M
+                if self.qkv_bias:
+                    attn += (H + 2 * KV) * Dh
+                per_unit_attn = attn + 2 * M             # 2 norms
+                if b == BLOCK_ATTN:
+                    per_unit += per_unit_attn + 3 * M * F
+                elif b == BLOCK_MOE:
+                    mf = self.moe_d_ff or F
+                    per_unit += per_unit_attn + self.n_experts * 3 * M * mf \
+                        + M * self.n_experts
+                elif b == BLOCK_MOE_DENSE_RESIDUAL:
+                    mf = self.moe_d_ff or F
+                    per_unit += per_unit_attn + 3 * M * F \
+                        + self.n_experts * 3 * M * mf + M * self.n_experts
+                elif b == BLOCK_SHARED_ATTN:
+                    # zamba2 shared block: parameters shared across units;
+                    # counted once outside the loop.
+                    per_unit += 2 * M
+            elif b == BLOCK_MAMBA:
+                Din = self.ssm_d_inner
+                Hs, N = self.ssm_n_heads, self.ssm_state
+                G = 1  # n_groups
+                conv_dim = Din + 2 * G * N
+                per_unit += (
+                    M * (2 * Din + 2 * G * N + Hs)       # in_proj
+                    + conv_dim * self.ssm_conv           # conv1d
+                    + 2 * Hs                             # A_log, D
+                    + Hs                                 # dt_bias
+                    + Din                                # gated norm
+                    + Din * M                            # out_proj
+                    + 2 * M)                             # norms
+            elif b == BLOCK_RWKV:
+                P = self.rwkv_head_dim
+                Hr = self.rwkv_n_heads
+                lora = 64            # decay LoRA rank (models.rwkv)
+                per_unit += (
+                    5 * M * M        # r, k, v, gate, output
+                    + 2 * M * lora   # data-dependent decay LoRA (A, B)
+                    + Hr * P         # bonus u
+                    + 7 * M          # token-shift mixes + ln_x + decay_w0
+                    + 2 * M * F      # channel-mix squared-relu FFN
+                    + 2 * M)
+        total += per_unit * self.n_units
+        if BLOCK_SHARED_ATTN in self.block_pattern:
+            attn = M * (H * Dh) + 2 * M * (KV * Dh) + (H * Dh) * M
+            total += attn + 3 * M * F                    # shared attn + its MLP
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE top-k instead of all experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        mf = self.moe_d_ff or self.d_ff
+        dead = 0
+        for b in self.block_pattern:
+            if b in (BLOCK_MOE, BLOCK_MOE_DENSE_RESIDUAL):
+                dead += (self.n_experts - self.top_k) * 3 * self.d_model * mf
+        return int(self.param_count() - dead * self.n_units)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Run configuration — the paper's knobs live here.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Everything about a run besides the architecture.
+
+    The paper's (σ, μ, λ) knobs:
+      * ``protocol``     — "hardsync" | "softsync" | "async"
+      * ``n_softsync``   — the splitting parameter n (protocol="softsync");
+                           n = λ degenerates to async (Eq. 5).
+      * ``n_learners``   — λ.  In the distributed runtime this is the size of
+                           the learner (data) mesh axis; in the simulator it
+                           is the number of simulated learner processes.
+      * ``minibatch``    — μ, per-learner mini-batch size.
+      * ``lr_policy``    — "const" | "staleness_inverse" (Eq. 6)
+                           | "sqrt_scale" (hardsync α₀√(λμ/B))
+                           | "per_gradient" (footnote-3 fine-grained variant).
+    """
+
+    protocol: str = "hardsync"
+    n_softsync: int = 1
+    n_learners: int = 1
+    minibatch: int = 128
+    base_lr: float = 0.001
+    ref_batch: int = 128                  # B in α₀√(λμ/B)
+    lr_policy: str = "const"
+    momentum: float = 0.9
+    optimizer: str = "momentum"           # "momentum" | "adagrad" | "adamw"
+    weight_decay: float = 0.0
+    warmstart_epochs: int = 0             # paper §5.5 hardsync warm start
+    seed: int = 0
+    # --- distributed runtime ------------------------------------------------
+    num_microbatches: int = 1
+    remat: bool = True
+    fsdp: bool = False                    # shard params over data axis too
+    use_pallas: bool = False              # TPU fast-path kernels
+    attn_impl: str = "chunked"            # "naive" | "chunked" | "pallas"
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    # unroll: trace structural loops as python loops instead of lax.scan.
+    # Used by the roofline cost probes — XLA's cost_analysis counts a while
+    # body ONCE regardless of trip count, so probes unroll (launch/roofline).
+    unroll: bool = False
+    # sequence-parallel residual (Korthikanti et al.) for head-parallel
+    # archs: constrain the residual stream to this PartitionSpec between
+    # blocks so Megatron's fp32 partial-sum all-reduces become bf16
+    # reduce-scatter/all-gather pairs and norms/residuals shard over `model`
+    # (§Perf iteration B1).  None = no constraint (CPU tests, seq-par mode).
+    residual_spec: Optional[tuple] = None
+
+    def __post_init__(self):
+        if self.protocol not in ("hardsync", "softsync", "async"):
+            raise ValueError(f"unknown protocol {self.protocol!r}")
+        if self.lr_policy not in ("const", "staleness_inverse", "sqrt_scale",
+                                  "per_gradient"):
+            raise ValueError(f"unknown lr_policy {self.lr_policy!r}")
+
+    @property
+    def gradients_per_update(self) -> int:
+        """c = ⌊λ/n⌋ (Eq. 5).  hardsync: exactly λ."""
+        if self.protocol == "hardsync":
+            return self.n_learners
+        if self.protocol == "async":
+            return 1
+        return max(1, self.n_learners // self.n_softsync)
+
+    @property
+    def expected_staleness(self) -> float:
+        """⟨σ⟩ for LR modulation.  Paper: ⟨σ⟩ = n for pipelined n-softsync."""
+        if self.protocol == "hardsync":
+            return 0.0
+        if self.protocol == "async":
+            return float(self.n_learners)
+        return float(self.n_softsync)
+
+    def learning_rate(self, measured_staleness: Optional[float] = None) -> float:
+        """Resolve the paper's LR policies (Eq. 6 / hardsync scaling)."""
+        if self.lr_policy == "const":
+            return self.base_lr
+        if self.lr_policy == "sqrt_scale":
+            return self.base_lr * math.sqrt(
+                self.n_learners * self.minibatch / self.ref_batch)
+        sigma = (measured_staleness if measured_staleness is not None
+                 else self.expected_staleness)
+        return self.base_lr / max(1.0, sigma)
+
+
+def validate_pairing(model: ModelConfig, shape: InputShape) -> Optional[str]:
+    """Return a skip-reason string if (model, shape) must be skipped, else None.
+
+    Skips mirror DESIGN.md §4: encoder-only models have no decode step;
+    full-attention models need a sliding-window variant for long_500k (all of
+    ours implement it, so only encoder-only skips remain).
+    """
+    if model.encoder_only and shape.kind == "decode":
+        return "encoder-only architecture has no autoregressive decode step"
+    if shape.name == "long_500k" and not model.subquadratic:
+        return "full quadratic attention cannot serve 524k context"
+    return None

@@ -1,0 +1,78 @@
+"""Scalar/vector clocks and staleness accounting (paper §3.1).
+
+The parameter server's weights carry a scalar timestamp ``ts_i`` that
+increments on every weight update.  A gradient inherits the timestamp of the
+weights it was computed from; its *staleness* when folded into update ``j``
+is ``σ = j − i``.  The set of gradient timestamps contributing to one update
+forms a vector clock; the paper's average staleness (Eq. 2) is
+
+    ⟨σ⟩_i = (i − 1) − mean(i_1, …, i_n).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StalenessRecord:
+    """Bookkeeping for one weight update event at the parameter server."""
+    update_index: int                 # i: timestamp after this update
+    gradient_timestamps: List[int]    # vector clock ⟨ts_{i_1} … ts_{i_n}⟩
+
+    @property
+    def staleness_values(self) -> List[int]:
+        """Per-gradient staleness σ = (i−1) − ts_g  (weights were at i−1
+        when this update was applied)."""
+        return [(self.update_index - 1) - t for t in self.gradient_timestamps]
+
+    @property
+    def average_staleness(self) -> float:
+        """Eq. 2."""
+        return float((self.update_index - 1)
+                     - np.mean(self.gradient_timestamps))
+
+
+class VectorClockLog:
+    """Accumulates StalenessRecords over a run; provides Fig.-4 statistics."""
+
+    def __init__(self):
+        self.records: List[StalenessRecord] = []
+
+    def record(self, update_index: int,
+               gradient_timestamps: Sequence[int]) -> StalenessRecord:
+        rec = StalenessRecord(update_index, list(gradient_timestamps))
+        self.records.append(rec)
+        return rec
+
+    # ---- statistics --------------------------------------------------------
+    def average_staleness_series(self) -> np.ndarray:
+        """⟨σ⟩ per update step (Fig. 4 main panels)."""
+        return np.array([r.average_staleness for r in self.records])
+
+    def all_staleness_values(self) -> np.ndarray:
+        """Per-gradient σ across the whole run (Fig. 4(b) inset)."""
+        if not self.records:
+            return np.zeros((0,))
+        return np.concatenate([np.asarray(r.staleness_values)
+                               for r in self.records])
+
+    def staleness_histogram(self, max_sigma: int = None):
+        vals = self.all_staleness_values()
+        hi = int(vals.max()) if max_sigma is None and len(vals) else max_sigma
+        edges = np.arange(-0.5, (hi or 0) + 1.5)
+        hist, _ = np.histogram(vals, bins=edges)
+        return hist / max(1, len(vals))
+
+    def fraction_exceeding(self, bound: float) -> float:
+        vals = self.all_staleness_values()
+        if len(vals) == 0:
+            return 0.0
+        return float(np.mean(vals > bound))
+
+    def mean_staleness(self) -> float:
+        vals = self.all_staleness_values()
+        return float(vals.mean()) if len(vals) else 0.0

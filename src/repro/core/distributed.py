@@ -1,0 +1,272 @@
+"""TPU-native Rudra protocols as SPMD programs (DESIGN.md §2).
+
+Inside one SPMD program there is no true asynchrony, so the n-softsync
+protocol is realised as **round-based softsync**: one training round = n
+sequential PS update events.  All λ learners (data-axis shard groups)
+compute gradients against the round-start weights θ(i); event j folds the
+mean gradient of group j with staleness σ_j = j, so σ ∈ {0..n−1} and
+⟨σ⟩ = (n−1)/2.  The LR policy sees the *measured* ⟨σ⟩.
+
+Two engines:
+
+* ``sequential`` — faithful semantics.  ``lax.scan`` over the n groups: each
+  iteration computes that group's gradient (backward over B/n samples) and
+  applies the update immediately.  Total FLOPs equal one pass over the global
+  batch, but the collective pattern is n gradient all-reduces per round —
+  exactly the PS-traffic penalty the paper measures for λ-softsync (§5.2).
+
+* ``fused`` — beyond-paper optimization.  Because the optimizer update is
+  linear in the gradients (SGD exactly; momentum after folding the geometric
+  velocity coefficients), the n sequential events collapse into ONE
+  staleness-weighted gradient combination, computable as a single backward
+  pass over a per-sample-weighted loss ⇒ one all-reduce per round, the same
+  collective cost as hardsync.  For momentum the velocity is updated once per
+  round with the staleness-weighted mean gradient (round-level momentum —
+  exact for SGD, a documented approximation for momentum; see
+  EXPERIMENTS.md §Perf for the convergence check).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, RunConfig
+from repro.core.lr_policies import hardsync_lr, softsync_lr
+
+
+# ---------------------------------------------------------------------------
+# per-event learning rates for one round
+# ---------------------------------------------------------------------------
+def round_event_lrs(run: RunConfig, n: int) -> np.ndarray:
+    """LR for each of the n update events in a round.
+
+    staleness_inverse: uniform α₀/⟨σ⟩ with the engine's measured ⟨σ⟩=(n−1)/2.
+    per_gradient (footnote 3): event j gets α₀/max(1, σ_j) with σ_j = j.
+    """
+    if run.lr_policy == "per_gradient":
+        return np.array([run.base_lr / max(1.0, float(j)) for j in range(n)])
+    if run.lr_policy == "staleness_inverse":
+        sigma = max(1.0, (n - 1) / 2.0)
+        return np.full((n,), run.base_lr / sigma)
+    if run.lr_policy == "sqrt_scale":
+        return np.full((n,), hardsync_lr(run))
+    return np.full((n,), run.base_lr)
+
+
+def fused_coefficients(run: RunConfig, n: int) -> Tuple[np.ndarray, float]:
+    """Fold n sequential momentum updates into one combination.
+
+    Sequential: v_j = m·v_{j-1} + g_j ;  θ ← θ − lr_j·v_j   (j = 0..n−1)
+    ⇒ θ_n = θ_0 − (Σ_j lr_j m^{j+1−?}) … − Σ_i (Σ_{j≥i} lr_j m^{j−i}) g_i
+    Returns (per-group gradient coefficients c_i for the θ update,
+    velocity-decay coefficient Σ_j lr_j m^{j}) — used by the fused engine.
+    For plain SGD (m = 0) this is exactly the per-event LRs.
+    """
+    lrs = round_event_lrs(run, n)
+    m = run.momentum if run.optimizer == "momentum" else 0.0
+    coef = np.zeros((n,))
+    for i in range(n):
+        for j in range(i, n):
+            coef[i] += lrs[j] * (m ** (j - i))
+    v0_coef = float(sum(lrs[j] * (m ** (j + 1)) for j in range(n)))
+    return coef, v0_coef
+
+
+# ---------------------------------------------------------------------------
+# optimizer state
+# ---------------------------------------------------------------------------
+def init_opt_state(run: RunConfig, params) -> dict:
+    if run.optimizer == "momentum":
+        return {"velocity": jax.tree.map(jnp.zeros_like, params)}
+    if run.optimizer == "adagrad":
+        return {"accum": jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+    if run.optimizer == "adamw":
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "nu": jax.tree.map(
+                    lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+    return {}
+
+
+def apply_optimizer(run: RunConfig, params, opt, grads, lr):
+    """One applyUpdate with the configured optimizer.  lr may be a traced
+    scalar (sequential engine scans over per-event LRs)."""
+    if run.optimizer == "momentum":
+        v = jax.tree.map(lambda v, g: run.momentum * v + g.astype(v.dtype),
+                         opt["velocity"], grads)
+        params = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32)
+                          - lr * v.astype(jnp.float32)).astype(p.dtype),
+            params, v)
+        return params, {"velocity": v}
+    if run.optimizer == "adagrad":
+        a = jax.tree.map(lambda a, g: a + jnp.square(g.astype(a.dtype)),
+                         opt["accum"], grads)
+        params = jax.tree.map(
+            lambda p, g, a: (p.astype(jnp.float32)
+                             - lr * g.astype(jnp.float32)
+                             / (jnp.sqrt(a.astype(jnp.float32)) + 1e-8)
+                             ).astype(p.dtype),
+            params, grads, a)
+        return params, {"accum": a}
+    if run.optimizer == "adamw":
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        cnt = opt["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          opt["mu"], grads)
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(n.dtype)),
+            opt["nu"], grads)
+        c1 = 1 - b1 ** cnt.astype(jnp.float32)
+        c2 = 1 - b2 ** cnt.astype(jnp.float32)
+        params = jax.tree.map(
+            lambda p, m, n: (p - lr * ((m.astype(jnp.float32) / c1)
+                             / (jnp.sqrt(n / c2) + eps)
+                             + run.weight_decay * p.astype(jnp.float32))
+                             ).astype(p.dtype),
+            params, mu, nu)
+        return params, {"mu": mu, "nu": nu, "count": cnt}
+    # plain SGD
+    params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return params, {}
+
+
+# ---------------------------------------------------------------------------
+# gradient computation with optional micro-batch accumulation
+# ---------------------------------------------------------------------------
+def grad_with_accum(loss_fn: Callable, params, batch, num_microbatches: int,
+                    sample_weights=None):
+    """value_and_grad with gradient accumulation over micro-batches.
+    Returns (loss, metrics, grads).  Gradients accumulate in fp32."""
+    def total_loss(p, b, w):
+        if w is None:
+            return loss_fn(p, b)
+        return loss_fn(p, b, sample_weights=w)
+
+    if num_microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(params, batch, sample_weights)
+        return loss, metrics, grads
+
+    mb = jax.tree.map(
+        lambda x: x.reshape((num_microbatches,
+                             x.shape[0] // num_microbatches) + x.shape[1:]),
+        batch)
+    wb = (None if sample_weights is None else
+          sample_weights.reshape(num_microbatches, -1))
+
+    def acc_body(carry, inp):
+        g_acc, l_acc = carry
+        if sample_weights is None:
+            b, w = inp, None
+        else:
+            b, w = inp
+        (loss, metrics), g = jax.value_and_grad(
+            total_loss, has_aux=True)(params, b, w)
+        g_acc = jax.tree.map(lambda a, x: a + x.astype(a.dtype), g_acc, g)
+        return (g_acc, l_acc + loss), metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    xs = mb if sample_weights is None else (mb, wb)
+    (g_sum, loss_sum), metrics = jax.lax.scan(
+        acc_body, (zeros, jnp.float32(0.0)), xs)
+    grads = jax.tree.map(lambda g: g / num_microbatches, g_sum)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss_sum / num_microbatches, metrics, grads
+
+
+# ---------------------------------------------------------------------------
+# train steps
+# ---------------------------------------------------------------------------
+def make_hardsync_step(run: RunConfig, loss_fn: Callable):
+    """Standard data-parallel step: Δθ = mean over the global batch ≡ Eq. 3.
+    LR follows the paper's hardsync scaling when lr_policy = sqrt_scale."""
+    lr = hardsync_lr(run) if run.lr_policy == "sqrt_scale" else run.base_lr
+
+    def step(params, opt, batch):
+        loss, metrics, grads = grad_with_accum(
+            loss_fn, params, batch, run.num_microbatches)
+        params_new, opt_new = apply_optimizer(run, params, opt, grads, lr)
+        return params_new, opt_new, metrics
+
+    return step
+
+
+def make_softsync_step(run: RunConfig, loss_fn: Callable,
+                       engine: str = "sequential"):
+    """Round-based n-softsync (DESIGN.md §2).  One call = one round = n
+    update events.  The global batch is split into n logical learner groups
+    along the batch axis.
+    """
+    n = max(1, run.n_softsync)
+    if run.protocol == "async":
+        n = run.n_learners
+
+    if engine == "fused":
+        return _make_fused_softsync_step(run, loss_fn, n)
+
+    lrs = jnp.asarray(round_event_lrs(run, n), jnp.float32)
+
+    def step(params, opt, batch):
+        grouped = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+        theta0 = params      # round-start weights: all groups' grads use θ(i)
+
+        def event(carry, inp):
+            params, opt, loss_acc = carry
+            group_batch, lr = inp
+            loss, metrics, grads = grad_with_accum(
+                loss_fn, theta0, group_batch, run.num_microbatches)
+            params, opt = apply_optimizer(run, params, opt, grads, lr)
+            return (params, opt, loss_acc + loss), metrics
+
+        (params, opt, loss_sum), metrics = jax.lax.scan(
+            event, (params, opt, jnp.float32(0.0)), (grouped, lrs))
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        metrics["loss_round_mean"] = loss_sum / n
+        return params, opt, metrics
+
+    return step
+
+
+def _make_fused_softsync_step(run: RunConfig, loss_fn: Callable, n: int):
+    """Fused engine: one backward pass over a per-sample-weighted loss.
+
+    The per-group θ-update coefficients c_i (fused_coefficients) become
+    per-sample loss weights w_s = n·c_{g(s)} / Σc  scaled so that the single
+    mean gradient equals Σ_i c_i · mean_{s∈i}(g_s) / (Σ_i c_i) — then the
+    whole round is one apply with lr = Σ_i c_i.
+    """
+    coef, v0_coef = fused_coefficients(run, n)
+    total = float(coef.sum())
+    group_w = jnp.asarray(coef / coef.mean(), jnp.float32)   # mean-1 weights
+
+    def step(params, opt, batch):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        per_sample_w = jnp.repeat(group_w, B // n)           # (B,)
+        loss, metrics, grads = grad_with_accum(
+            loss_fn, params, batch, run.num_microbatches,
+            sample_weights=per_sample_w)
+        # grads is the weighted MEAN (1/n)Σ_i (c_i/c̄)·mean_i = Σ_i c_i·mean_i/Σc,
+        # so one apply with lr = Σ_i c_i reproduces θ₀ − Σ_i c_i·mean_i exactly.
+        lr = total
+        params, opt = apply_optimizer(run, params, opt, grads, lr)
+        return params, opt, metrics
+
+    return step
+
+
+def make_train_step(run: RunConfig, loss_fn: Callable,
+                    engine: str = "sequential"):
+    if run.protocol == "hardsync":
+        return make_hardsync_step(run, loss_fn)
+    return make_softsync_step(run, loss_fn, engine=engine)

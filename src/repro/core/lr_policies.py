@@ -1,0 +1,68 @@
+"""Learning-rate policies (paper §3.2 / §5.1 and footnote 3).
+
+* ``const``             — α = α₀ (the paper's divergent control at n = 30).
+* ``sqrt_scale``        — hardsync: α = α₀·√(λμ/B)  (§3.2).
+* ``staleness_inverse`` — n-softsync: α = α₀/⟨σ⟩ = α₀/n  (Eq. 6).
+* ``per_gradient``      — footnote 3: each gradient g with staleness σ_g gets
+                          α_g = α₀ / max(1, σ_g).  The paper suggests but does
+                          not evaluate this; we implement it as a beyond-paper
+                          feature and benchmark it against Eq. 6.
+
+Policies are callables ``(update_timestamp, gradient_timestamps) -> α`` (or a
+list of per-gradient α for ``per_gradient``), matching what
+``ParameterServerState.push_gradient`` expects.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Union
+
+from repro.config import RunConfig
+
+LR = Union[float, List[float]]
+
+
+def make_lr_policy(run: RunConfig):
+    base = run.base_lr
+
+    if run.lr_policy == "const":
+        def policy(ts: int, clocks: Sequence[int]) -> LR:
+            return base
+        return policy
+
+    if run.lr_policy == "sqrt_scale":
+        scale = math.sqrt(run.n_learners * run.minibatch / run.ref_batch)
+
+        def policy(ts: int, clocks: Sequence[int]) -> LR:
+            return base * scale
+        return policy
+
+    if run.lr_policy == "staleness_inverse":
+        sigma = max(1.0, run.expected_staleness)
+
+        def policy(ts: int, clocks: Sequence[int]) -> LR:
+            return base / sigma
+        return policy
+
+    if run.lr_policy == "per_gradient":
+        def policy(ts: int, clocks: Sequence[int]) -> LR:
+            # staleness of gradient g when applied now: ts − ts_g
+            return [base / max(1.0, float(ts - t)) for t in clocks]
+        return policy
+
+    raise ValueError(run.lr_policy)
+
+
+def hardsync_lr(run: RunConfig) -> float:
+    """α₀·√(λμ/B) — the paper's hardsync scaling (§3.2)."""
+    return run.base_lr * math.sqrt(
+        run.n_learners * run.minibatch / run.ref_batch)
+
+
+def softsync_lr(run: RunConfig, measured_staleness: float = None) -> float:
+    """α₀/⟨σ⟩ (Eq. 6).  Pass the measured ⟨σ⟩ when available (the distributed
+    round-based engine has ⟨σ⟩ = (n−1)/2 rather than the pipelined n)."""
+    sigma = (measured_staleness if measured_staleness is not None
+             else run.expected_staleness)
+    return run.base_lr / max(1.0, sigma)

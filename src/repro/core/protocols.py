@@ -1,0 +1,107 @@
+"""Synchronization-protocol update rules (paper §3.1, Eqs. 3–5).
+
+These are pure pytree functions shared by the event-driven simulator and the
+distributed (pjit/shard_map) runtime:
+
+* hardsync  — Δθ = (1/λ) Σ_{l=1..λ} Δθ_l          (Eq. 3)
+* n-softsync — Δθ = (1/c) Σ_{l=1..c} Δθ_l, c=⌊λ/n⌋ (Eq. 5)
+* async     — Δθ = Δθ_l                            (Eq. 4; c = 1)
+
+All three reduce to "average c gradients, scale by α, subtract" — so one
+``apply_update`` with the protocol deciding c and the LR policy deciding α.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_mean(grads: Sequence) -> object:
+    """Average a list of gradient pytrees (the PS's sumGradients ÷ c)."""
+    n = float(len(grads))
+    return jax.tree.map(lambda *g: sum(g) / n, *grads)
+
+
+def tree_weighted_sum(grads: Sequence, weights: Sequence[float]) -> object:
+    """Σ w_g · grad_g — used by the fused staleness-weighted reduction."""
+    return jax.tree.map(
+        lambda *g: sum(w * x for w, x in zip(weights, g)), *grads)
+
+
+def sgd_apply(params, grad, lr: float):
+    """applyUpdate: θ ← θ − α·Δθ  (Eq. 1c)."""
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grad)
+
+
+def momentum_apply(params, velocity, grad, lr: float, momentum: float):
+    """Momentum-SGD applyUpdate (the paper's optimizer, §4.2)."""
+    new_v = jax.tree.map(lambda v, g: momentum * v + g.astype(v.dtype),
+                         velocity, grad)
+    new_p = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype),
+                         params, new_v)
+    return new_p, new_v
+
+
+def adagrad_apply(params, accum, grad, lr: float, eps: float = 1e-8):
+    """AdaGrad applyUpdate (used by the paper for ImageNet 1-softsync)."""
+    new_a = jax.tree.map(lambda a, g: a + jnp.square(g.astype(a.dtype)),
+                         accum, grad)
+    new_p = jax.tree.map(
+        lambda p, g, a: p - lr * g.astype(p.dtype)
+        / (jnp.sqrt(a.astype(p.dtype)) + eps),
+        params, grad, new_a)
+    return new_p, new_a
+
+
+class ParameterServerState:
+    """Host-side PS used by the event-driven simulator (Rudra-base logic).
+
+    Holds the master weights + scalar timestamp, accumulates pushed gradients
+    and fires an update every ``c`` arrivals, exactly like the paper's PS.
+    """
+
+    def __init__(self, params, c: int, optimizer: str = "sgd",
+                 momentum: float = 0.9):
+        self.params = params
+        self.timestamp = 0
+        self.c = c
+        self.optimizer = optimizer
+        self.momentum = momentum
+        self._pending: List = []            # (grad, grad_timestamp)
+        if optimizer == "momentum":
+            self.velocity = jax.tree.map(jnp.zeros_like, params)
+        elif optimizer == "adagrad":
+            self.accum = jax.tree.map(jnp.zeros_like, params)
+
+    def push_gradient(self, grad, grad_timestamp: int, lr_for_update):
+        """Receive one gradient.  Returns the StalenessRecord-compatible
+        vector clock if an update fired, else None.
+
+        ``lr_for_update`` is a callable (gradient_timestamps -> α) so the LR
+        policy can see the vector clock (per-gradient modulation)."""
+        self._pending.append((grad, grad_timestamp))
+        if len(self._pending) < self.c:
+            return None
+        grads = [g for g, _ in self._pending]
+        clocks = [t for _, t in self._pending]
+        self._pending = []
+        lr = lr_for_update(self.timestamp, clocks)
+        if callable(getattr(lr, "__iter__", None)) or isinstance(lr, (list,)):
+            # per-gradient LRs: weighted sum instead of uniform mean
+            delta = tree_weighted_sum(grads, [w / len(grads) for w in lr])
+            self.params = sgd_apply(self.params, delta, 1.0)
+        else:
+            delta = tree_mean(grads)
+            if self.optimizer == "momentum":
+                self.params, self.velocity = momentum_apply(
+                    self.params, self.velocity, delta, lr, self.momentum)
+            elif self.optimizer == "adagrad":
+                self.params, self.accum = adagrad_apply(
+                    self.params, self.accum, delta, lr)
+            else:
+                self.params = sgd_apply(self.params, delta, lr)
+        self.timestamp += 1
+        return clocks

@@ -1,0 +1,150 @@
+"""(σ, μ, λ) tradeoff machinery: the paper's runtime model + curve driver.
+
+The paper's runtime numbers come from a P775 cluster that does not exist in
+this container, so wall-clock is *derived* from a calibrated analytical model
+of the three Rudra system architectures (§3.2/3.3):
+
+* compute:  t_mb(μ) = t_fix + μ·t_sample / gemm_eff(μ) — small mini-batches
+  under-utilize the GEMM units (§5.2), captured by gemm_eff(μ) = μ/(μ+κ).
+* communication: pushGradient + pullWeights move the full model W bytes each.
+  - Rudra-base: flat PS ⇒ λ pushes serialize at the PS link; learners block.
+  - Rudra-adv:  tree PS ⇒ serialization factor log₂(branch) per level; weight
+    broadcast down the PS tree.
+  - Rudra-adv*: comm threads + learner broadcast tree ⇒ comm fully
+    overlapped except the first-gradient dependency.
+
+The model is calibrated so the baseline (σ,μ,λ) = (0,128,1) CIFAR run matches
+the paper's 22,392 s for 140 epochs, and reproduces the *qualitative* claims
+(Fig. 8 speed-ups, Table 1 overlap, Table 2 time ordering).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """P775-like node + interconnect constants (relative units)."""
+    t_fixed: float = 0.05          # per-minibatch fixed overhead (s)
+    t_sample: float = 0.0011       # per-sample compute at perfect GEMM eff (s)
+    gemm_kappa: float = 12.0       # μ/(μ+κ) GEMM efficiency knee
+    link_bw: float = 24e9          # B/s per link (paper: 192 GB/s bidir node)
+    ps_service_bw: float = 24e9    # PS ingest bandwidth
+    tree_branch: int = 8           # Rudra-adv PS tree branching factor
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadModel:
+    model_bytes: float = 350e3     # CIFAR CNN ≈ 350 kB (§4.2)
+    dataset_size: int = 50_000
+    epochs: int = 140
+
+
+def gemm_efficiency(mu: int, kappa: float) -> float:
+    return mu / (mu + kappa)
+
+
+def compute_time(mu: int, hw: HardwareModel) -> float:
+    return hw.t_fixed + mu * hw.t_sample / gemm_efficiency(mu, hw.gemm_kappa)
+
+
+def comm_time_per_push(arch: str, lam: int, hw: HardwareModel,
+                       wl: WorkloadModel) -> float:
+    """Exposed (non-overlapped) communication time per minibatch.
+    Contention coefficients calibrated so the adversarial scenario
+    (μ=4, 300 MB, ~60 learners) reproduces the paper's Table 1 overlaps."""
+    wire = wl.model_bytes / hw.link_bw          # one model transfer
+    if arch == "base":
+        # flat PS: λ concurrent senders contend at the PS ingest link;
+        # push + pull both exposed (effective concurrency ≈ 0.66·λ).
+        return wire * 0.66 * lam + wire
+    if arch == "adv":
+        # tree PS: contention only among ≤branch siblings per level.
+        levels = max(1, math.ceil(math.log(max(lam, 2), hw.tree_branch)))
+        return wire * hw.tree_branch * levels * 0.33
+    if arch == "adv*":
+        # fully threaded: only the enqueue latency is exposed.
+        return wire * 0.02
+    raise ValueError(arch)
+
+
+def minibatch_time(arch: str, mu: int, lam: int, hw: HardwareModel,
+                   wl: WorkloadModel) -> float:
+    comp = compute_time(mu, hw)
+    comm = comm_time_per_push(arch, lam, hw, wl)
+    if arch == "adv*":
+        # overlap: comm hidden behind compute except residual
+        return max(comp, comm) + 0.02 * comm
+    return comp + comm
+
+
+def communication_overlap(arch: str, mu: int, lam: int,
+                          hw: HardwareModel = HardwareModel(),
+                          wl: WorkloadModel = WorkloadModel()) -> float:
+    """Table 1: computation / (computation + exposed communication)."""
+    comp = compute_time(mu, hw)
+    comm = comm_time_per_push(arch, lam, hw, wl)
+    if arch == "adv*":
+        exposed = max(0.0, comm - comp) + 0.02 * comm
+    else:
+        exposed = comm
+    return comp / (comp + exposed)
+
+
+def epoch_time(arch: str, protocol: str, mu: int, lam: int,
+               hw: HardwareModel = HardwareModel(),
+               wl: WorkloadModel = WorkloadModel(),
+               jitter_sigma: float = 0.05) -> float:
+    """Simulated seconds per epoch for a (protocol, μ, λ) configuration."""
+    mb_per_learner = wl.dataset_size / (mu * lam)
+    t_mb = minibatch_time(arch, mu, lam, hw, wl)
+    if protocol == "hardsync":
+        # barrier: expected max of λ lognormal draws ≈ mean·(1 + σ√(2 ln λ))
+        straggle = 1.0 + jitter_sigma * math.sqrt(2 * math.log(max(lam, 2)))
+        return mb_per_learner * t_mb * straggle
+    # softsync: learners run free; PS throughput may bind for tiny μ.
+    # The PS ingest scales with the architecture: the adv tree distributes
+    # aggregation over `branch` children per level; adv* additionally
+    # overlaps ingest with compute.
+    ps_bw = hw.ps_service_bw
+    if arch == "adv":
+        ps_bw *= hw.tree_branch
+    elif arch == "adv*":
+        ps_bw *= hw.tree_branch * 4
+    ps_updates_per_s = 1.0 / max(1e-9, wl.model_bytes / ps_bw * lam)
+    learner_rate = lam / t_mb                    # minibatches/s aggregate
+    effective = min(learner_rate, ps_updates_per_s * lam)
+    return wl.dataset_size / mu / effective
+
+
+def training_time(arch: str, protocol: str, mu: int, lam: int,
+                  hw: HardwareModel = HardwareModel(),
+                  wl: WorkloadModel = WorkloadModel()) -> float:
+    return wl.epochs * epoch_time(arch, protocol, mu, lam, hw, wl)
+
+
+def calibrate_to_baseline(target_seconds: float = 22_392.0,
+                          wl: WorkloadModel = WorkloadModel()
+                          ) -> HardwareModel:
+    """Scale t_sample so (hardsync, μ=128, λ=1) matches the paper's baseline
+    140-epoch wall-clock (§5.4)."""
+    hw = HardwareModel()
+    base = training_time("base", "hardsync", 128, 1, hw, wl)
+    scale = target_seconds / base
+    return dataclasses.replace(hw, t_fixed=hw.t_fixed * scale,
+                               t_sample=hw.t_sample * scale)
+
+
+def speedup_table(arch: str, protocol: str, mu: int,
+                  lams=(1, 2, 4, 10, 18, 30),
+                  hw: HardwareModel = None) -> Dict[int, float]:
+    """Fig. 8: speed-up vs the λ=1 configuration at the same μ."""
+    hw = hw or calibrate_to_baseline()
+    base = training_time(arch, "hardsync", mu, 1, hw)
+    return {lam: base / training_time(arch, protocol, mu, lam, hw)
+            for lam in lams}

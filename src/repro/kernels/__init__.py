@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers (DESIGN.md §6):
+
+* ``ps_update``        — fused PS applyUpdate (the paper's hot-spot)
+* ``flash_attention``  — blockwise attention, causal/window tile skipping
+* ``ssm_scan``         — Mamba2 SSD chunked scan
+* ``wkv6``             — RWKV6 data-dependent-decay recurrence
+
+``ops`` holds the jit'd public wrappers (interpret mode on CPU);
+``ref`` the pure-jnp oracles every kernel is tested against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,161 @@
+"""Blockwise (flash) attention Pallas kernel for TPU.
+
+Online-softmax attention with causal and sliding-window masks.  Grid is
+(batch·kv_heads·groups, q_blocks, kv_blocks); the kv axis is the innermost
+*arbitrary* (sequential) dimension so the output block is revisited with
+running (m, l, acc) carried in VMEM scratch — the canonical TPU flash
+pattern.  Q/K/V tiles are MXU-aligned (block sizes multiples of 128 on the
+head dim enter the systolic array directly).
+
+GQA is handled by folding the query-group dimension into the row dimension
+of the Q tile: q is laid out (B, KV, G, S, D) and each program attends one
+(b, kv) pair's G·blk_q query rows against that kv head's K/V stream.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int,
+                 blk_q: int, blk_k: int, n_kv_blocks: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip fully-masked tiles (strictly above the causal diagonal / beyond
+    # the sliding window) — no MXU work, no VMEM traffic for those blocks
+    k0 = ki * blk_k
+    q_lo = qi * blk_q
+    q_hi = q_lo + blk_q - 1
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k0 <= q_hi)
+    if window > 0:
+        live = live & (k0 + blk_k - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        _attn_block(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, qi, ki,
+                    scale=scale, causal=causal, window=window,
+                    blk_q=blk_q, blk_k=blk_k, seq_k=seq_k)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def _attn_block(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, qi, ki, *,
+                scale, causal, window, blk_q, blk_k, seq_k):
+    q = q_ref[0].astype(jnp.float32)          # (G, blk_q, D)
+    k = k_ref[0].astype(jnp.float32)          # (blk_k, D)
+    v = v_ref[0].astype(jnp.float32)          # (blk_k, D)
+    G, D = q.shape[0], q.shape[2]
+    Gq = G * blk_q
+    q2 = q.reshape(Gq, D)
+
+    s = jnp.dot(q2, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(
+        jnp.int32, (G, blk_q), 1).reshape(Gq)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, blk_k), 1).reshape(blk_k)
+    mask = (k_pos[None, :] < seq_k)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+
+def flash_attention_bkgsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool, window: int = 0,
+                          blk_q: int = 128, blk_k: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, Sq, D); k/v: (B, KV, Sk, D).  Returns q-shaped out."""
+    Bb, KV, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    nq = -(-Sq // blk_q)
+    nk = -(-Sk // blk_k)
+    pq, pk = nq * blk_q - Sq, nk * blk_k - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    qf = q.reshape(Bb * KV, G, nq * blk_q, D)
+    kf = k.reshape(Bb * KV, nk * blk_k, D)
+    vf = v.reshape(Bb * KV, nk * blk_k, D)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=float(1.0 / np.sqrt(D)), causal=causal,
+        window=window, blk_q=blk_q, blk_k=blk_k, n_kv_blocks=nk, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bb * KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, blk_q, D), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, blk_q, D), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qf.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * blk_q, 1), jnp.float32),
+            pltpu.VMEM((G * blk_q, 1), jnp.float32),
+            pltpu.VMEM((G * blk_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(Bb, KV, G, nq * blk_q, D)
+    return out[:, :, :, :Sq, :]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Convenience layout adapter.  q: (B, Sq, H, D); k/v: (B, Sk, KV, D).
+    Returns (B, Sq, H, D) — matches ``models.attention`` conventions."""
+    Bb, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qt = q.transpose(0, 2, 1, 3).reshape(Bb, KV, G, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bkgsd(qt, kt, vt, causal=causal, window=window,
+                                blk_q=blk_q, blk_k=blk_k,
+                                interpret=interpret)
+    return out.reshape(Bb, H, Sq, D).transpose(0, 2, 1, 3)

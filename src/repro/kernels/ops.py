@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as traced JAX ops per grid point, which validates the exact TPU
+program logic.  On TPU backends they compile to Mosaic.  Callers never pass
+``interpret`` themselves; it is derived from the backend once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ps_update as _ps
+from repro.kernels import ssm_scan as _ssm
+from repro.kernels import wkv6 as _wkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",
+                                             "blk_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    blk_q: int = 128, blk_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               blk_q=blk_q, blk_k=blk_k,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("momentum", "lr", "row_block"))
+def ps_update(w_flat, v_flat, g_flat, coef, *, momentum: float = 0.9,
+              lr: float = 1.0, row_block: int = _ps.DEFAULT_ROW_BLOCK):
+    return _ps.ps_update_flat(w_flat, v_flat, g_flat, coef,
+                              momentum=momentum, lr=lr, row_block=row_block,
+                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssm_scan(x, a, Bm, Cm, *, chunk: int = 256):
+    return _ssm.ssm_scan(x, a, Bm, Cm, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, *, chunk: int = _wkv.DEFAULT_CHUNK, init_state=None):
+    del init_state   # kernel path starts from zero state (see wkv6 docstring)
+    return _wkv.wkv6(r, k, v, w, u, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,107 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Grid (batch, heads, chunks); the chunk axis is sequential ("arbitrary") and
+carries the (N, P) inter-chunk state in VMEM scratch — the TPU-native
+version of the SSD algorithm: quadratic intra-chunk attention-form on the
+MXU, tiny recurrent state carried between grid steps instead of a serial
+scan over time.
+
+Inputs follow ``repro.models.ssm.ssd_chunked``:
+    x (B, S, H, P) — dt-premultiplied inputs
+    a (B, S, H)    — per-step log decay (negative)
+    Bm/Cm (B, S, N) — input/output projections (n_groups = 1)
+Returns (y (B, S, H, P), final_state (B, H, N, P)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, state_scr,
+                *, Q: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)          # (Q,)
+    Bc = b_ref[0].astype(jnp.float32)               # (Q, N)
+    Cc = c_ref[0].astype(jnp.float32)               # (Q, N)
+
+    cum = jnp.cumsum(a)                             # (Q,)
+    # intra-chunk decay matrix: exp(cum_i - cum_j) masked to i >= j
+    diff = cum[:, None] - cum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)      # (Q, Q)
+
+    scores = jnp.dot(Cc, Bc.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    y_intra = jnp.dot(scores * decay, x,
+                      preferred_element_type=jnp.float32)           # (Q, P)
+
+    state = state_scr[...]                          # (N, P)
+    y_inter = jnp.exp(cum)[:, None] * jnp.dot(
+        Cc, state, preferred_element_type=jnp.float32)              # (Q, P)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    total = cum[-1]
+    w = jnp.exp(total - cum)                        # (Q,)
+    state_new = (jnp.exp(total) * state
+                 + jnp.dot(Bc.T * w[None, :], x,
+                           preferred_element_type=jnp.float32))
+    state_scr[...] = state_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_new.astype(state_out_ref.dtype)
+
+
+def ssm_scan(x: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array, *,
+             chunk: int = 256, interpret: bool = False):
+    """Chunked SSD scan.  Shapes as in the module docstring."""
+    Bt, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = nc * Q
+
+    kernel = functools.partial(_ssd_kernel, Q=Q, n_chunks=nc)
+    y, final_state = pl.pallas_call(
+        kernel,
+        grid=(Bt, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, Sp, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, a, Bm, Cm)
+    return y[:, :S], final_state

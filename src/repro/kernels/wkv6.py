@@ -1,0 +1,129 @@
+"""RWKV6 WKV recurrence Pallas kernel (chunked, data-dependent decay).
+
+Per head, recurrence over time with per-channel decay on the key dim:
+
+    S_t   = diag(exp(w_t)) · S_{t-1} + k_t ⊗ v_t
+    out_t = r_t · (S_{t-1} + diag(u) · (k_t ⊗ v_t))
+
+Chunked closed form (chunk length Q, state S₀ entering the chunk):
+
+    out_i = (r_i ∘ e_i) · S₀  +  Σ_{j<i} [Σ_p r_{i,p} k_{j,p} E_{ijp}] v_j
+            + (r_i ∘ u ∘ k_i) · v_i
+    E_ijp = exp(cum_{i-1,p} − cum_{j,p}) ∈ (0, 1]   (cum = inclusive cumsum w)
+    e_i   = exp(cum_{i-1})
+    S'    = diag(exp(cum_Q)) S₀ + Σ_j (k_j ∘ exp(cum_Q − cum_j)) ⊗ v_j
+
+Because the decay is per-channel the intra-chunk pair term needs the
+(Q, Q, P) tensor E — we keep Q small (32) so the tile is ≤ 256 kB fp32 in
+VMEM.  All exponent arguments are ≤ 0, so the math is stable by
+construction.  Grid (batch, heads, chunks), chunk axis sequential with the
+(P, P) state in scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 32
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_out_ref,
+                state_scr, *, Q: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)       # log decay, < 0
+    u = u_ref[0].astype(jnp.float32)                # (P,)
+
+    cum = jnp.cumsum(w, axis=0)                     # (Q, P) inclusive
+    cum_excl = cum - w                              # cum_{i-1}
+    e_in = jnp.exp(cum_excl)                        # (Q, P) decay into step i
+
+    state = state_scr[...]                          # (P_k, P_v)
+    # inter-chunk: out_i += (r_i ∘ e_i) · S0
+    y_inter = jnp.dot(r * e_in, state,
+                      preferred_element_type=jnp.float32)            # (Q, Pv)
+
+    # intra-chunk pair term: A_ij = Σ_p r_ip k_jp exp(cum_excl_i − cum_j), j<i
+    diff = cum_excl[:, None, :] - cum[None, :, :]   # (Q, Q, P), ≤0 for j<i
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    E = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)
+    A = jnp.einsum("ip,jp,ijp->ij", r, k, E)        # (Q, Q)
+    y_intra = jnp.dot(A, v, preferred_element_type=jnp.float32)
+
+    # diagonal (bonus) term: (r_i ∘ u ∘ k_i) · v_i
+    y_diag = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True) * v
+
+    y_ref[0, :, 0, :] = (y_inter + y_intra + y_diag).astype(y_ref.dtype)
+
+    # state update
+    decay_out = jnp.exp(cum[-1][:, None])           # (P, 1)
+    kw = k * jnp.exp(cum[-1][None, :] - cum)        # (Q, P)
+    state_new = decay_out * state + jnp.dot(
+        kw.T, v, preferred_element_type=jnp.float32)
+    state_scr[...] = state_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        state_out_ref[0, 0] = state_new.astype(state_out_ref.dtype)
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+         init_state=None, interpret: bool = False):
+    """r/k/v/w: (B, S, H, P); u: (H, P).  Returns (out (B,S,H,P) fp32,
+    final_state (B, H, P, P)).
+
+    Note: ``init_state`` must be zeros for the kernel path (scratch is
+    zero-initialised); pass non-zero states only to the recurrent reference.
+    """
+    Bt, S, H, P = r.shape
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        w = jnp.pad(w, zpad)   # pad w with 0 ⇒ exp(0)=1 decay, harmless tail
+    Sp = nc * Q
+
+    kernel = functools.partial(_wkv_kernel, Q=Q, n_chunks=nc)
+    y, final_state = pl.pallas_call(
+        kernel,
+        grid=(Bt, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, P), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, Sp, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, P, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y[:, :S], final_state

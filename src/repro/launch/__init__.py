@@ -1,0 +1,1 @@
+"""Launcher: mesh, sharding, dry-run, roofline, train CLI."""

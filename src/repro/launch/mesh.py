@@ -1,0 +1,53 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests see 1 CPU).
+
+TPU v5e constants used by the roofline (per chip):
+  peak bf16: 197 TFLOP/s; HBM: 819 GB/s; ICI: ~50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+SINGLE_POD_SHAPE = (16, 16)
+SINGLE_POD_AXES = ("data", "model")
+MULTI_POD_SHAPE = (2, 16, 16)
+MULTI_POD_AXES = ("pod", "data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The learner (batch) axes: ('pod', 'data') on multi-pod meshes."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_chips(mesh: jax.sharding.Mesh) -> int:
+    return mesh.devices.size
+
+
+def n_learners(mesh: jax.sharding.Mesh) -> int:
+    """λ for the distributed runtime = product of the learner axes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    lam = 1
+    for a in data_axes(mesh):
+        lam *= sizes[a]
+    return lam
+
+
+def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count
+    to have been set before jax init)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,264 @@
+"""Sharding policy: PartitionSpecs for parameters, inputs, caches.
+
+Two tensor-parallel modes, chosen per architecture (DESIGN.md §5):
+
+* **head-parallel** (``n_heads % model_axis == 0``, likewise for SSM/RWKV
+  head counts): Megatron-style.  Attention Q/O sharded over heads (K/V
+  replicated when the GQA kv count does not divide — they are small), MLP
+  column→row parallel, Mamba/RWKV channel dims sharded on head boundaries.
+  Used by: llama3-405b (128H), internvl2 (16H), hubert (16H), zamba2
+  (32H attn / 112 ssm heads), rwkv6 (64 heads).
+
+* **sequence-parallel** (indivisible head counts: qwen2 12H, qwen3 40H,
+  starcoder2 36H, arctic 56H, llama4 40H): weights replicated over `model`,
+  activations sharded over the *sequence* dim on `model`.  Attention induces
+  a K/V all-gather (small under GQA); everything else is token-local.  This
+  avoids both redundant compute and the giant partial-sum all-reduces a
+  row-parallel fallback would cause.
+
+MoE experts are always expert-parallel over `model` (E = 128 = 8 experts per
+shard).  FSDP (≥50 B params, or ≥5 B in seq-parallel mode where weights are
+otherwise replicated over `model`) additionally shards parameters over the
+learner (`data`/`pod`) axes.  The layer-stack axis (dim 0 of every ``units``
+leaf) is the scan axis — never sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import InputShape, ModelConfig, RunConfig
+from repro.launch.mesh import data_axes
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _data_size(mesh: Mesh) -> int:
+    return int(np.prod([_axis_size(mesh, a) for a in data_axes(mesh)]))
+
+
+def _dspec(mesh: Mesh):
+    dax = data_axes(mesh)
+    return dax if len(dax) > 1 else dax[0]
+
+
+def parallelism_mode(cfg: ModelConfig, model_size: int) -> str:
+    """'head' or 'seq' — see module docstring."""
+    from repro import config as C
+    if cfg.has_attention and cfg.n_heads % model_size != 0:
+        return "seq"
+    if C.BLOCK_MAMBA in cfg.block_pattern and \
+            cfg.ssm_n_heads % model_size != 0:
+        return "seq"
+    if C.BLOCK_RWKV in cfg.block_pattern and \
+            cfg.rwkv_n_heads % model_size != 0:
+        return "seq"
+    return "head"
+
+
+def needs_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    mode = parallelism_mode(cfg, _axis_size(mesh, "model"))
+    threshold = 5e9 if mode == "seq" else 5e10
+    return cfg.param_count() > threshold
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+def _head_spec(name: str, shape, ms: int, F) -> Optional[tuple]:
+    """Per-leaf spec (head-parallel mode).  `F` = fsdp axes or None.
+    `name` is the final path segment with its parent (e.g. 'attn/w_q')."""
+    def div(d):
+        return shape[d] % ms == 0 and shape[d] >= ms
+
+    if name.endswith("/w_q"):
+        return (F, "model", None) if div(1) else (F, None, None)
+    if name.endswith("/w_k") and len(shape) == 3 or \
+            name.endswith("/w_v") and len(shape) == 3:
+        return (F, "model", None) if div(1) else (F, None, None)
+    if name.endswith("/w_o") and len(shape) == 3:
+        return ("model", None, F) if div(0) else (None, None, F)
+    if name.endswith(("/b_q", "/b_k", "/b_v")):
+        return ("model", None) if div(0) else (None, None)
+    if name.endswith(("/q_norm", "/k_norm")):
+        return (None,)
+    # dense MLP (SwiGLU)
+    if name.endswith(("mlp/w_gate", "mlp/w_up")):
+        return (F, "model") if div(1) else (F, None)
+    if name.endswith("mlp/w_down"):
+        return ("model", F) if div(0) else (None, F)
+    # MoE experts: expert-parallel
+    if "/moe/" in name and len(shape) == 3:
+        return ("model", F, None) if div(0) else (F, None, None)
+    if name.endswith("w_router"):
+        return (None, None)
+    # Mamba2
+    if name.endswith(("/w_z", "/w_x", "/w_dt")):
+        return (F, "model") if div(1) else (F, None)
+    if name.endswith("/w_bc"):
+        return (F, None)
+    if name.endswith(("/conv_x",)):
+        return (None, "model") if div(1) else (None, None)
+    if name.endswith(("/conv_bc",)):
+        return (None, None)
+    if name.endswith(("/conv_bx", "/A_log", "/D", "/dt_bias",
+                      "/norm_scale")):
+        return ("model",) if div(0) else (None,)
+    if name.endswith("/conv_bbc"):
+        return (None,)
+    if name.endswith("/w_out"):
+        return ("model", F) if div(0) else (None, F)
+    # RWKV6
+    if name.endswith(("/w_r", "/w_g")) or \
+            (name.endswith("/w_k") and len(shape) == 2 and
+             "ffn" not in name) or \
+            (name.endswith("/w_v") and len(shape) == 2 and "ffn" not in name):
+        return (F, "model") if div(1) else (F, None)
+    if name.endswith("rwkv/w_o"):
+        return ("model", F) if div(0) else (None, F)
+    if name.endswith("/decay_A"):
+        return (F, None)
+    if name.endswith("/decay_B"):
+        return (None, "model") if div(1) else (None, None)
+    if name.endswith("/bonus_u"):
+        return ("model", None) if div(0) else (None, None)
+    if name.endswith("ffn/w_k"):
+        return (F, "model") if div(1) else (F, None)
+    if name.endswith("ffn/w_v"):
+        return ("model", F) if div(0) else (None, F)
+    return None
+
+
+def _spec_for_leaf(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                   mode: str, fsdp: bool, fsdp_wide: bool = False) -> P:
+    ms = _axis_size(mesh, "model")
+    ds = _data_size(mesh)
+    dspec = _dspec(mesh)
+
+    is_stacked = path.startswith("units/")
+    inner = path.split("/", 1)[1] if is_stacked else path
+    shp = shape[1:] if is_stacked else shape
+
+    # top-level leaves
+    if inner == "embed":                      # (V, M)
+        spec = ("model" if shp[0] % ms == 0 else None, None)
+    elif inner == "head":                     # (M, V)
+        spec = (None, "model" if shp[1] % ms == 0 else None)
+    elif inner.startswith("final_norm") or inner.startswith("frontend"):
+        spec = (None,) * len(shp)
+    elif mode == "head" or inner.split("/")[0] == "shared" or \
+            "/moe/" in inner or inner.endswith("w_router"):
+        s = _head_spec("/" + inner, shp, ms, None)
+        spec = s if s is not None else (None,) * len(shp)
+    else:
+        # seq-parallel: replicate over model (experts handled above)
+        spec = (None,) * len(shp)
+
+    spec = list(spec)
+    # FSDP: shard one replicated-so-far dim over the learner axes.  For
+    # seq-parallel giants (ZeRO-3, §Perf B2) shard over data AND model when
+    # the leaf does not already use `model`.
+    if fsdp:
+        wide = fsdp_wide and all(s != "model" for s in spec)
+        fspec = ((tuple(data_axes(mesh)) + ("model",)) if wide else dspec)
+        fsize = ds * (ms if wide else 1)
+        cand = sorted(range(len(shp)), key=lambda d: -shp[d])
+        for d in cand:
+            if spec[d] is None and shp[d] % fsize == 0 and shp[d] >= fsize:
+                spec[d] = fspec
+                break
+    if is_stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_shardings(params_shape, mesh: Mesh, fsdp: bool,
+                    mode: Optional[str] = None, fsdp_wide: bool = False):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    if mode is None:
+        raise ValueError("pass mode explicitly (parallelism_mode(cfg, ...))")
+
+    def leaf_sharding(path, leaf):
+        spec = _spec_for_leaf(_path_str(path), leaf.shape, mesh, mode, fsdp,
+                              fsdp_wide)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(leaf_sharding, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# inputs & caches
+# ---------------------------------------------------------------------------
+def batch_spec_for(cfg: ModelConfig, mesh: Mesh, mode: str,
+                   batch: int, seq: int):
+    """(batch_axis_spec, seq_axis_spec) for (B, S)-shaped inputs."""
+    ds = _data_size(mesh)
+    ms = _axis_size(mesh, "model")
+    bspec = _dspec(mesh) if batch % ds == 0 and batch >= ds else None
+    sspec = ("model" if mode == "seq" and seq % ms == 0 and seq > ms
+             else None)
+    return bspec, sspec
+
+
+def cache_shardings(caches_shape, mesh: Mesh, batch: int):
+    """Decode caches (units, B, ...): batch over learners; the context/state
+    dim over `model` — context-parallel decode (every chip holds 1/16 of the
+    KV history or the head-sharded recurrent state)."""
+    ms = _axis_size(mesh, "model")
+    ds = _data_size(mesh)
+    dspec = _dspec(mesh)
+
+    def leaf_sharding(path, leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % ds == 0 and shape[1] >= ds:
+            spec[1] = dspec
+        # first dim after batch that divides the model axis: for KV caches
+        # that is the context dim C; for SSM/RWKV states the head dim H.
+        for d in range(2, len(shape)):
+            if shape[d] % ms == 0 and shape[d] >= ms:
+                spec[d] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(leaf_sharding, caches_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def default_microbatches(cfg: ModelConfig, shape: InputShape,
+                         data_shards: int = 16, model_shards: int = 16,
+                         budget_bytes: float = 10e9) -> int:
+    """Gradient-accumulation factor so train activations fit HBM.
+
+    Estimate: remat keeps one residual-stream copy per unit plus ~4x
+    transients for the live unit's backward (fp32 intermediates), sharded
+    over data (and over model for sequence-parallel archs)."""
+    if shape.kind != "train":
+        return 1
+    mode = parallelism_mode(cfg, model_shards)
+    tokens_per_dev = shape.global_batch * shape.seq_len / data_shards
+    if mode == "seq":
+        tokens_per_dev /= model_shards
+    act = tokens_per_dev * cfg.d_model * cfg.n_units * 2 * 5.0
+    mb = 1
+    while act / mb > budget_bytes and mb < 64:
+        mb *= 2
+    # each micro-batch must still cover every data shard (and the softsync
+    # group split); llama3-class models saturate this cap — the remaining
+    # overrun is attacked in §Perf via sequence-parallel residuals.
+    mb = min(mb, max(1, shape.global_batch // (4 * data_shards) * 4))
+    while (shape.global_batch // 4) % mb != 0 and mb > 1:
+        mb //= 2
+    return mb

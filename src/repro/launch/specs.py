@@ -1,0 +1,196 @@
+"""ShapeDtypeStruct stand-ins for every model input + the step functions the
+dry-run lowers.  No device allocation anywhere (weak-type-correct, shardable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import (InputShape, ModelConfig, RunConfig, INPUT_SHAPES,
+                          validate_pairing)
+from repro.core.distributed import init_opt_state, make_train_step
+from repro.launch import sharding as shd
+from repro.launch.mesh import data_axes, n_learners
+from repro.models import init_caches, init_model, model_loss
+from repro.models.layers import dtype_of
+from repro.serve.engine import prefill_step, serve_step
+
+
+def _sds(shape, dtype, mesh: Mesh, spec: P) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _model_axis_size(mesh: Mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                with_labels: bool = True,
+                mode_override: str = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Input batch ShapeDtypeStructs for (cfg, shape) on ``mesh``.
+    Sequence-parallel archs shard the seq dim over `model` (train/prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    mode = mode_override or shd.parallelism_mode(cfg, _model_axis_size(mesh))
+    bspec, sspec = shd.batch_spec_for(cfg, mesh, mode, B, S)
+    dt = dtype_of(cfg.dtype)
+
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "audio":
+        out["frames"] = _sds((B, S, cfg.d_model), dt, mesh,
+                             P(bspec, sspec, None))
+    elif cfg.frontend == "vision":
+        npfx = cfg.n_prefix_embeds
+        _, pspec = shd.batch_spec_for(cfg, mesh, mode, B, npfx)
+        _, tspec = shd.batch_spec_for(cfg, mesh, mode, B, S - npfx)
+        out["patches"] = _sds((B, npfx, cfg.d_model), dt, mesh,
+                              P(bspec, pspec, None))
+        out["tokens"] = _sds((B, S - npfx), jnp.int32, mesh,
+                             P(bspec, tspec))
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, P(bspec, sspec))
+    if with_labels:
+        out["labels"] = _sds((B, S), jnp.int32, mesh, P(bspec, sspec))
+        out["loss_mask"] = _sds((B, S), jnp.float32, mesh, P(bspec, sspec))
+    return out
+
+
+def params_specs(cfg: ModelConfig, mesh: Mesh, fsdp: bool,
+                 mode_override: str = None):
+    shapes = jax.eval_shape(
+        functools.partial(init_model, cfg), jax.random.PRNGKey(0))
+    mode = mode_override or shd.parallelism_mode(cfg, _model_axis_size(mesh))
+    # ZeRO-3 (§Perf B2): seq-parallel giants shard params over data AND
+    # model (weights otherwise replicated over `model` would not fit HBM)
+    from repro.launch.mesh import n_learners as _nl
+    fsdp_wide = (mode == "seq" and fsdp and
+                 cfg.param_count() * 2 / _nl(mesh) > 8e9)
+    shardings = shd.param_shardings(shapes, mesh, fsdp, mode=mode,
+                                    fsdp_wide=fsdp_wide)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def opt_specs(run: RunConfig, pspecs):
+    """Optimizer state mirrors parameter shardings."""
+    shapes = jax.eval_shape(functools.partial(init_opt_state, run), pspecs)
+
+    def share(path, leaf):
+        # momentum/adagrad/adam leaves mirror the corresponding param leaf;
+        # scalar counters are replicated.
+        return leaf
+    # jax.eval_shape on ShapeDtypeStructs with shardings propagates them for
+    # identical-shaped outputs; for safety rebuild explicitly:
+    flat_p = {shd._path_str(p): l.sharding for p, l in
+              jax.tree_util.tree_flatten_with_path(pspecs)[0]}
+
+    def assign(path, leaf):
+        key = shd._path_str(path)
+        # strip the opt-state prefix ("velocity/", "mu/", ...)
+        sub = key.split("/", 1)[1] if "/" in key else key
+        sh = flat_p.get(sub)
+        if sh is None or leaf.ndim == 0:
+            mesh = next(iter(flat_p.values())).mesh
+            sh = NamedSharding(mesh, P())
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    shapes = jax.eval_shape(
+        functools.partial(init_caches, cfg, shape.global_batch,
+                          shape.seq_len))
+    shardings = shd.cache_shardings(shapes, mesh, shape.global_batch)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+# ---------------------------------------------------------------------------
+# the three lowerable step functions
+# ---------------------------------------------------------------------------
+def make_run_config(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                    protocol: str = "softsync", n_softsync: int = 4,
+                    engine: str = "sequential",
+                    num_microbatches: int = 0,
+                    attn_q_chunk: int = 1024,
+                    attn_kv_chunk: int = 1024,
+                    seq_par_residual: bool = False,
+                    mode_override: str = None) -> Tuple[RunConfig, str]:
+    lam = n_learners(mesh)
+    mb = num_microbatches or shd.default_microbatches(cfg, shape)
+    residual_spec = None
+    mode = mode_override or shd.parallelism_mode(cfg, _model_axis_size(mesh))
+    if seq_par_residual and shape.kind != "decode" and mode == "head":
+        dax = data_axes(mesh)
+        residual_spec = (dax if len(dax) > 1 else dax[0], "model", None)
+    run = RunConfig(
+        residual_spec=residual_spec,
+        protocol=protocol if shape.kind == "train" else "hardsync",
+        n_softsync=n_softsync,
+        n_learners=lam,
+        minibatch=max(1, shape.global_batch // lam),
+        lr_policy=("staleness_inverse" if protocol == "softsync"
+                   else "sqrt_scale"),
+        optimizer="momentum",                      # the paper's optimizer
+        num_microbatches=mb,
+        remat=True,
+        fsdp=shd.needs_fsdp(cfg, mesh),
+        attn_impl="chunked",
+        attn_q_chunk=attn_q_chunk,
+        attn_kv_chunk=attn_kv_chunk,
+    )
+    return run, engine
+
+
+def build_lowerable(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                    run: RunConfig, engine: str = "sequential",
+                    mode_override: str = None):
+    """Returns (jitted_fn, arg_specs tuple) ready for .lower(*specs)."""
+    skip = validate_pairing(cfg, shape)
+    if skip:
+        raise ValueError(f"({cfg.name} × {shape.name}) skipped: {skip}")
+
+    pspecs = params_specs(cfg, mesh, run.fsdp, mode_override=mode_override)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        def loss_fn(p, b, sample_weights=None):
+            return model_loss(cfg, run, p, b, sample_weights=sample_weights)
+        step = make_train_step(run, loss_fn, engine=engine)
+        ospecs = opt_specs(run, pspecs)
+        bspecs = batch_specs(cfg, shape, mesh, mode_override=mode_override)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn, (pspecs, ospecs, bspecs)
+
+    if shape.kind == "prefill":
+        def pf(params, batch):
+            return prefill_step(cfg, run, params, batch)
+        bspecs = batch_specs(cfg, shape, mesh, with_labels=False,
+                             mode_override=mode_override)
+        fn = jax.jit(pf)
+        return fn, (pspecs, bspecs)
+
+    # decode
+    def dec(params, tokens, position, caches):
+        return serve_step(cfg, run, params, tokens, position, caches)
+    cspecs = cache_specs(cfg, shape, mesh)
+    B = shape.global_batch
+    dax = data_axes(mesh)
+    dsize = 1
+    for a, s in zip(mesh.axis_names, mesh.devices.shape):
+        if a in dax:
+            dsize *= s
+    bspec = (dax if len(dax) > 1 else dax[0]) if B % dsize == 0 else None
+    tok = _sds((B, 1), jnp.int32, mesh, P(bspec))
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+    fn = jax.jit(dec, donate_argnums=(3,))
+    return fn, (pspecs, tok, pos, cspecs)

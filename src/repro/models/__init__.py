@@ -1,0 +1,6 @@
+from repro.models.transformer import (init_model, model_forward, model_loss,
+                                      model_decode_step, init_caches,
+                                      count_params)
+
+__all__ = ["init_model", "model_forward", "model_loss", "model_decode_step",
+           "init_caches", "count_params"]

@@ -1,0 +1,146 @@
+"""Primitive layers shared by every architecture family.
+
+All layers are pure functions over explicit parameter pytrees (dicts of
+jnp arrays).  Norm/softmax accumulation happens in fp32 regardless of the
+compute dtype; outputs are cast back.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, d_head); positions: broadcastable to (..., seq)."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta))      # (d_head/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    """SwiGLU MLP.  p: {w_gate (M,F), w_up (M,F), w_down (F,M)}."""
+    g = jnp.einsum("...m,mf->...f", x, p["w_gate"])
+    u = jnp.einsum("...m,mf->...f", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fm->...m", h, p["w_down"])
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = float(1.0 * float(1.0 / np.sqrt(d_model)))
+    s_out = float(1.0 * float(1.0 / np.sqrt(d_ff)))
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def sqrelu_ffn(x: jax.Array, p: dict) -> jax.Array:
+    """RWKV channel-mix FFN: squared-relu.  p: {w_k (M,F), w_v (F,M)}."""
+    k = jnp.einsum("...m,mf->...f", x, p["w_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("...f,fm->...m", k, p["w_v"])
+
+
+def init_sqrelu_ffn(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_k": jax.random.normal(k1, (d_model, d_ff), dtype) * float(1.0 / np.sqrt(d_model)),
+        "w_v": jax.random.normal(k2, (d_ff, d_model), dtype) * float(1.0 / np.sqrt(d_ff)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return jax.random.normal(key, (vocab, d_model), dtype) * 0.02
+
+
+def lm_head(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., M), w: (M, V) -> logits (..., V) in fp32."""
+    return jnp.einsum("...m,mv->...v", x, w).astype(jnp.float32)
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype) -> jax.Array:
+    return jax.random.normal(key, (d_model, vocab), dtype) * float(1.0 / np.sqrt(d_model))
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE over (optionally masked) positions.  logits fp32 (..., V)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array,
+             mask: Optional[jax.Array] = None) -> jax.Array:
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    if mask is None:
+        return jnp.mean(correct)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(correct * mask) / jnp.maximum(jnp.sum(mask), 1.0)

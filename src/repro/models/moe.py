@@ -1,0 +1,122 @@
+"""Mixture-of-Experts with capacity-based scatter dispatch (GShard-style).
+
+TPU adaptation notes (DESIGN.md §5): experts are sharded over the ``model``
+mesh axis (expert parallelism); tokens are grouped so that the per-group
+dispatch buffers stay small and the dispatch crossing the data→model axes
+lowers to all-to-all-style collectives under GSPMD.
+
+We deliberately avoid the one-hot dispatch *einsum* of the original GShard
+formulation: its (groups, tokens, experts, capacity) tensor is ~10 TB at our
+train_4k shape.  Instead tokens are scattered into per-expert capacity
+buffers and gathered back (Megablocks-style dense-capacity variant), which
+keeps memory O(tokens · d_model) while remaining fully static-shaped.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    M = cfg.d_model
+    F = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = float(1.0 / np.sqrt(M)), float(1.0 / np.sqrt(F))
+    return {
+        "w_router": jax.random.normal(ks[0], (M, E), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (E, M, F), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (E, M, F), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (E, F, M), dtype) * s_out,
+    }
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    E, k = cfg.n_experts, cfg.top_k
+    c = int(math.ceil(tokens_per_group * k / E * cfg.capacity_factor))
+    return max(c, 1)
+
+
+def _dispatch_one_group(tokens, fidx, pos, keep, E, C):
+    """tokens (T*k, M) already gathered per slot; scatter to (E, C, M)."""
+    M = tokens.shape[-1]
+    buf = jnp.zeros((E, C, tokens.shape[-1]), tokens.dtype)
+    contrib = tokens * keep[:, None].astype(tokens.dtype)
+    return buf.at[fidx, pos].add(contrib)
+
+
+def moe_forward(cfg: ModelConfig, p: dict, x: jax.Array
+                ) -> Tuple[jax.Array, dict]:
+    """x: (B, S, M).  Returns (out (B,S,M), aux dict with losses/metrics)."""
+    B, S, M = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    # Group tokens.  Groups must (a) hold ≥ E tokens so the capacity stays
+    # integral with bounded waste, and (b) stay ≤ GROUP_T tokens and aligned
+    # with the sequence sharding so the slot bookkeeping (cumsum over the
+    # group) and the scatter stay shard-local — long sequences are split into
+    # (B · S/GROUP_T) groups instead of one 32k-token group per batch row
+    # (EXPERIMENTS.md §Perf iteration A1).  Decode batches (S == 1) fold into
+    # one group.
+    GROUP_T = 2048
+    if S >= E:
+        T = min(S, GROUP_T)
+        while S % T:
+            T //= 2
+        G = B * (S // T)
+        xg = x.reshape(G, T, M)
+    else:
+        G, T = 1, B * S
+        xg = x.reshape(1, T, M)
+    C = capacity(T, cfg)
+
+    logits = jnp.einsum("gtm,me->gte", xg.astype(jnp.float32), p["w_router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, T, E)
+    gate_w, idx = jax.lax.top_k(probs, k)                      # (G, T, k)
+    gate_w = gate_w / jnp.maximum(jnp.sum(gate_w, -1, keepdims=True), 1e-9)
+
+    # ---- aux losses ------------------------------------------------------
+    # Switch-style load balance: E * Σ_e fraction_e · prob_e
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], E)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- slot assignment: position of each routed token within its expert -
+    fidx = idx.reshape(G, T * k)                               # (G, T*k)
+    onehot = jax.nn.one_hot(fidx, E, dtype=jnp.int32)          # (G, T*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                       # (G, T*k, E)
+    pos = jnp.take_along_axis(pos, fidx[..., None], axis=-1)[..., 0]
+    keep = pos < C                                             # capacity drop
+
+    # ---- dispatch --------------------------------------------------------
+    slot_tokens = jnp.repeat(xg, k, axis=1)                    # (G, T*k, M)
+    buf = jax.vmap(_dispatch_one_group, in_axes=(0, 0, 0, 0, None, None))(
+        slot_tokens, fidx, pos, keep, E, C)                    # (G, E, C, M)
+
+    # ---- expert compute (SwiGLU) ------------------------------------------
+    g = jnp.einsum("gecm,emf->gecf", buf, p["w_gate"])
+    u = jnp.einsum("gecm,emf->gecf", buf, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    eo = jnp.einsum("gecf,efm->gecm", h, p["w_down"])          # (G, E, C, M)
+
+    # ---- combine -----------------------------------------------------------
+    gathered = jax.vmap(lambda o, f, q: o[f, q])(eo, fidx, pos)  # (G,T*k,M)
+    w = (gate_w.reshape(G, T * k) * keep).astype(gathered.dtype)
+    out = (gathered * w[..., None]).reshape(G, T, k, M).sum(axis=2)
+    out = out.reshape(B, S, M)
+
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {
+        "lb_loss": lb_loss * cfg.load_balance_loss,
+        "z_loss": z_loss * cfg.router_z_loss,
+        "dropped_fraction": dropped,
+    }
+    return out, aux

@@ -1,0 +1,217 @@
+"""RWKV6 ("Finch") block — attention-free token mixing with data-dependent
+per-channel decay (arXiv:2404.05892).
+
+Recurrence per head (key dim P_k = value dim P_v = P):
+
+    S_t   = diag(exp(w_t)) · S_{t-1} + k_t ⊗ v_t      (w_t < 0, data-dependent)
+    out_t = r_t · (S_{t-1} + diag(u) · (k_t ⊗ v_t))
+
+The XLA fallback runs the recurrence with ``jax.lax.scan`` over time (exact,
+memory O(state)); the Pallas kernel (``repro.kernels.wkv6``) computes the
+same thing chunked in VMEM.  Decode is a single recurrence step — RWKV serves
+long_500k with a constant-size state, which is the whole point of the family.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.layers import rms_norm, sqrelu_ffn, init_sqrelu_ffn
+
+_DECAY_LORA = 64
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype) -> dict:
+    M = cfg.d_model
+    H, P = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    s = float(1.0 / np.sqrt(M))
+    p = {
+        # token-shift interpolation coefficients (static per-channel mix)
+        "mu_r": jnp.full((M,), 0.5, dtype),
+        "mu_k": jnp.full((M,), 0.5, dtype),
+        "mu_v": jnp.full((M,), 0.5, dtype),
+        "mu_w": jnp.full((M,), 0.5, dtype),
+        "mu_g": jnp.full((M,), 0.5, dtype),
+        "w_r": jax.random.normal(ks[0], (M, M), dtype) * s,
+        "w_k": jax.random.normal(ks[1], (M, M), dtype) * s,
+        "w_v": jax.random.normal(ks[2], (M, M), dtype) * s,
+        "w_g": jax.random.normal(ks[3], (M, M), dtype) * s,
+        "w_o": jax.random.normal(ks[4], (M, M), dtype) * s,
+        # data-dependent decay LoRA:  w = w0 + tanh(x@A)@B
+        "decay_w0": jnp.full((M,), -6.0, jnp.float32),
+        "decay_A": jax.random.normal(ks[5], (M, _DECAY_LORA), dtype) * s,
+        "decay_B": jax.random.normal(ks[6], (_DECAY_LORA, M), dtype)
+        * float(1.0 / np.sqrt(_DECAY_LORA)),
+        "bonus_u": jax.random.normal(ks[7], (H, P), jnp.float32) * 0.1,
+        "ln_x_scale": jnp.ones((M,), dtype),     # per-head group norm
+        # channel mix (d_ff from the config; RWKV default is 3.5–4×M)
+        "mu_ck": jnp.full((M,), 0.5, dtype),
+        "ffn": init_sqrelu_ffn(ks[8], M, cfg.d_ff, dtype),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, last: jax.Array = None) -> jax.Array:
+    """Previous-token tensor.  x: (B, S, M); last: (B, M) decode carry."""
+    if last is None:
+        last = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu
+
+
+def wkv_recurrent(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array, init_state=None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Exact recurrence via scan over time.
+
+    r/k/v: (B, S, H, P); w: (B, S, H, P) log-decay (< 0); u: (H, P) bonus.
+    Returns (out (B,S,H,P) fp32, final state (B,H,P,P))."""
+    B, S, H, P = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = w.astype(jnp.float32)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, P), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                       # (B,H,P)
+        kv = jnp.einsum("bhp,bhq->bhpq", kt, vt)   # key ⊗ value
+        out = jnp.einsum("bhp,bhpq->bhq", rt, state + u[None, :, :, None] * kv)
+        state = jnp.exp(wt)[..., None] * state + kv
+        return state, out
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    final, out = jax.lax.scan(step, init_state, xs)
+    return out.transpose(1, 0, 2, 3), final
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, chunk: int = 32, init_state=None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV (python loop over chunks — the roofline-probe / unrolled
+    path; same algorithm as ``repro.kernels.wkv6``).  All exponent arguments
+    are ≤ 0 so the math is stable by construction."""
+    B, S, H, P = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = w.astype(jnp.float32)
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        rf, kf, vf = jnp.pad(rf, zp), jnp.pad(kf, zp), jnp.pad(vf, zp)
+        wf = jnp.pad(wf, zp)
+    state = (jnp.zeros((B, H, P, P), jnp.float32) if init_state is None
+             else init_state)
+    tri = (jnp.arange(Q)[:, None] > jnp.arange(Q)[None, :])
+    outs = []
+    for ci in range(nc):
+        sl = slice(ci * Q, (ci + 1) * Q)
+        rc, kc, vc, wc = rf[:, sl], kf[:, sl], vf[:, sl], wf[:, sl]
+        cum = jnp.cumsum(wc, axis=1)                   # (B,Q,H,P) inclusive
+        cum_excl = cum - wc
+        e_in = jnp.exp(cum_excl)
+        y_inter = jnp.einsum("bihp,bhpq->bihq", rc * e_in, state)
+        diff = cum_excl[:, :, None] - cum[:, None]     # (B,Q,Q,H,P) ≤ 0 (j<i)
+        E = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        A = jnp.einsum("bihp,bjhp,bijhp->bijh", rc, kc, E)
+        y_intra = jnp.einsum("bijh,bjhq->bihq", A, vc)
+        y_diag = jnp.einsum("bihp,bihp->bih", rc * u[None, None], kc
+                            )[..., None] * vc
+        outs.append(y_inter + y_intra + y_diag)
+        decay_out = jnp.exp(cum[:, -1])                # (B,H,P)
+        kw = kc * jnp.exp(cum[:, -1][:, None] - cum)
+        state = (decay_out[..., None] * state
+                 + jnp.einsum("bjhp,bjhq->bhpq", kw, vc))
+    out = jnp.concatenate(outs, axis=1)[:, :S]
+    return out, state
+
+
+def _time_mix(cfg: ModelConfig, p: dict, x: jax.Array, shifted: jax.Array,
+              state=None, use_pallas: bool = False, unroll: bool = False):
+    B, S, M = x.shape
+    H, P = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    xr = _mix(x, shifted, p["mu_r"])
+    xk = _mix(x, shifted, p["mu_k"])
+    xv = _mix(x, shifted, p["mu_v"])
+    xw = _mix(x, shifted, p["mu_w"])
+    xg = _mix(x, shifted, p["mu_g"])
+    r = (xr @ p["w_r"]).reshape(B, S, H, P)
+    k = (xk @ p["w_k"]).reshape(B, S, H, P)
+    v = (xv @ p["w_v"]).reshape(B, S, H, P)
+    g = jax.nn.silu((xg @ p["w_g"]).astype(jnp.float32))
+    lora = jnp.tanh((xw @ p["decay_A"]).astype(jnp.float32))
+    wdec = p["decay_w0"] + lora @ p["decay_B"].astype(jnp.float32)
+    # log decay: -exp(w)  in (-inf, 0)
+    w = -jnp.exp(wdec).reshape(B, S, H, P)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out, new_state = kops.wkv6(r, k, v, w, p["bonus_u"],
+                                   init_state=state)
+    elif unroll and S > 1:
+        # roofline probe: cap the python-loop trip count at 128 chunks; the
+        # intra-term overcount vs the kernel's chunk-32 is <5% of block FLOPs
+        out, new_state = wkv_chunked(r, k, v, w, p["bonus_u"],
+                                     chunk=max(32, S // 128),
+                                     init_state=state)
+    else:
+        out, new_state = wkv_recurrent(r, k, v, w, p["bonus_u"],
+                                       init_state=state)
+    out = out.reshape(B, S, M)
+    out = rms_norm(out.astype(x.dtype), p["ln_x_scale"], cfg.norm_eps)
+    out = (out.astype(jnp.float32) * g).astype(x.dtype)
+    return out @ p["w_o"], new_state
+
+
+def rwkv_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                 use_pallas: bool = False, unroll: bool = False) -> jax.Array:
+    """Full-sequence RWKV6 block (time mix + channel mix, pre-norm residuals
+    are applied by the caller; this returns the time-mix output only —
+    channel-mix is exposed separately so blocks.py can place both)."""
+    shifted = _token_shift(x)
+    out, _ = _time_mix(cfg, p, x, shifted, use_pallas=use_pallas,
+                       unroll=unroll)
+    return out
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                     last: jax.Array = None) -> jax.Array:
+    shifted = _token_shift(x, last)
+    xk = _mix(x, shifted, p["mu_ck"])
+    return sqrelu_ffn(xk, p["ffn"])
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H, P, M = cfg.rwkv_n_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "wkv": jnp.zeros((batch, H, P, P), jnp.float32),
+        "shift_tm": jnp.zeros((batch, M), dtype),
+        "shift_cm": jnp.zeros((batch, M), dtype),
+    }
+
+
+def rwkv_decode_time_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                         cache: dict) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, M)."""
+    shifted = cache["shift_tm"][:, None]
+    out, new_state = _time_mix(cfg, p, x, shifted, state=cache["wkv"])
+    new_cache = dict(cache)
+    new_cache["wkv"] = new_state
+    new_cache["shift_tm"] = x[:, 0]
+    return out, new_cache
+
+
+def rwkv_decode_channel_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                            cache: dict) -> Tuple[jax.Array, dict]:
+    out = rwkv_channel_mix(cfg, p, x, last=cache["shift_cm"])
+    new_cache = dict(cache)
+    new_cache["shift_cm"] = x[:, 0]
+    return out, new_cache

@@ -1,0 +1,252 @@
+"""Mamba2 (SSD) block: chunked state-space scan + single-step decode.
+
+Forward path follows the "SSD minimal" formulation of the Mamba2 paper:
+within a chunk the recurrence is computed as a (masked, decay-weighted)
+attention-like quadratic form; across chunks a small state (H, N, P) is
+carried by ``jax.lax.scan``, so memory stays O(chunk) in sequence length and
+the context can grow to 524k tokens (long_500k).
+
+The Pallas kernel in ``repro.kernels.ssm_scan`` implements the same chunked
+algorithm tiled for VMEM; ``repro.kernels.ref`` holds the step-by-step
+recurrent oracle both are tested against.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    """Parameter leaves are split on head boundaries so tensor parallelism
+    shards cleanly (DESIGN.md §5): w_z/w_x/w_dt and the per-head scalars
+    shard channel/head dims over `model`; the small shared B/C projection and
+    its conv stay replicated (B/C are shared across heads, n_groups = 1)."""
+    M = cfg.d_model
+    Din = cfg.ssm_d_inner
+    H = cfg.ssm_n_heads
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    s = float(1.0 / np.sqrt(M))
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = np.exp(np.random.RandomState(0).uniform(
+        np.log(1e-3), np.log(1e-1), size=(H,))).astype(np.float32)
+    dt_bias = dt + np.log(-np.expm1(-dt))
+    return {
+        "w_z": jax.random.normal(ks[0], (M, Din), dtype) * s,
+        "w_x": jax.random.normal(ks[1], (M, Din), dtype) * s,
+        "w_bc": jax.random.normal(ks[2], (M, 2 * N), dtype) * s,
+        "w_dt": jax.random.normal(ks[3], (M, H), dtype) * s,
+        "conv_x": jax.random.normal(ks[4], (cfg.ssm_conv, Din), dtype)
+        * float(1.0 / np.sqrt(cfg.ssm_conv)),
+        "conv_bc": jax.random.normal(ks[5], (cfg.ssm_conv, 2 * N), dtype)
+        * float(1.0 / np.sqrt(cfg.ssm_conv)),
+        "conv_bx": jnp.zeros((Din,), dtype),
+        "conv_bbc": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.asarray(np.log(np.arange(1, H + 1, dtype=np.float32))),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias),
+        "norm_scale": jnp.ones((Din,), dtype),
+        "w_out": jax.random.normal(ks[6], (Din, M), dtype)
+        * float(1.0 / np.sqrt(Din)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan
+# ---------------------------------------------------------------------------
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q).  Returns (..., Q, Q) with out[i, j] = sum_{t=j+1..i} a_t
+    for i >= j, -inf below the diagonal (i < j)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_{j+1..i}
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, init_state=None,
+                unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective-state-space scan.
+
+    x: (Bt, S, H, P) inputs (already multiplied by dt)
+    a: (Bt, S, H)    per-step log decay (= dt * A, negative)
+    B: (Bt, S, N)    input projection  (n_groups = 1, shared across heads)
+    C: (Bt, S, N)    output projection
+    Returns (y (Bt,S,H,P), final_state (Bt,H,N,P)).
+
+    Recurrence: S_t = exp(a_t)·S_{t-1} + B_t ⊗ x_t ;  y_t = C_t · S_t.
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    xb = x.reshape(Bt, nc, Q, H, P).transpose(1, 0, 3, 2, 4)   # (nc,Bt,H,Q,P)
+    ab = a.reshape(Bt, nc, Q, H).transpose(1, 0, 3, 2)         # (nc,Bt,H,Q)
+    Bb = B.reshape(Bt, nc, Q, N).transpose(1, 0, 2, 3)         # (nc,Bt,Q,N)
+    Cb = C.reshape(Bt, nc, Q, N).transpose(1, 0, 2, 3)
+
+    if init_state is None:
+        init_state = jnp.zeros((Bt, H, N, P), jnp.float32)
+
+    def chunk_step(state, inp):
+        xc, ac, Bc, Cc = inp
+        # xc (Bt,H,Q,P) fp32; ac (Bt,H,Q); Bc/Cc (Bt,Q,N)
+        xc = xc.astype(jnp.float32)
+        Bc = Bc.astype(jnp.float32)
+        Cc = Cc.astype(jnp.float32)
+        cum = jnp.cumsum(ac, axis=-1)                          # (Bt,H,Q)
+        seg = _segsum(ac)                                      # (Bt,H,Q,Q)
+        decay = jnp.exp(seg)                                   # lower-tri
+        # intra-chunk: y_i += Σ_{j<=i} C_i·B_j exp(Σ_{j+1..i} a) x_j
+        scores = jnp.einsum("bin,bjn->bij", Cc, Bc)            # (Bt,Q,Q)
+        y_intra = jnp.einsum("bij,bhij,bhjp->bhip",
+                             scores, decay, xc)
+        # inter-chunk: y_i += C_i · (exp(cum_i) * state)
+        y_inter = jnp.einsum("bin,bhnp,bhi->bhip",
+                             Cc, state, jnp.exp(cum))
+        y = y_intra + y_inter                                  # (Bt,H,Q,P)
+        # state update: S' = exp(total) S + Σ_j exp(total - cum_j) B_j x_j
+        total = cum[..., -1]                                   # (Bt,H)
+        w = jnp.exp(total[..., None] - cum)                    # (Bt,H,Q)
+        state_new = (jnp.exp(total)[..., None, None] * state
+                     + jnp.einsum("bjn,bhj,bhjp->bhnp", Bc, w, xc))
+        return state_new, y.transpose(0, 2, 1, 3)              # (Bt,Q,H,P)
+
+    if unroll:
+        state = init_state
+        ys = []
+        for ci in range(nc):
+            state, yc = chunk_step(state, (xb[ci], ab[ci], Bb[ci], Cb[ci]))
+            ys.append(yc)
+        final_state, yb = state, jnp.stack(ys)
+    else:
+        final_state, yb = jax.lax.scan(chunk_step, init_state,
+                                       (xb, ab, Bb, Cb))
+    y = yb.transpose(1, 0, 2, 3, 4).reshape(Bt, nc * Q, H, P)
+    return y[:, :S].astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, a: jax.Array,
+                    B: jax.Array, C: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence.  state (Bt,H,N,P); x (Bt,H,P); a (Bt,H);
+    B/C (Bt,N).  Returns (y (Bt,H,P), new state)."""
+    xf = x.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    state = (jnp.exp(a)[..., None, None] * state
+             + jnp.einsum("bn,bhp->bhnp", Bf, xf))
+    y = jnp.einsum("bn,bhnp->bhp", Cf, state)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+def _causal_conv(xc: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  xc (B, S, D); w (K, D).  Returns output and
+    the trailing K-1 inputs (decode cache)."""
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((xc.shape[0], K - 1, xc.shape[-1]), xc.dtype)
+    xin = jnp.concatenate([history, xc], axis=1)
+    out = sum(xin[:, i:i + xc.shape[1]] * w[i] for i in range(K))
+    out = jax.nn.silu((out + b).astype(jnp.float32)).astype(xc.dtype)
+    new_hist = xin[:, -(K - 1):]
+    return out, new_hist
+
+
+def _project(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x: (B, S, M) -> z (B,S,Din), xs (B,S,Din), BC (B,S,2N), dt (B,S,H)."""
+    z = jnp.einsum("bsm,md->bsd", x, p["w_z"])
+    xs = jnp.einsum("bsm,md->bsd", x, p["w_x"])
+    bc = jnp.einsum("bsm,md->bsd", x, p["w_bc"])
+    dt = jnp.einsum("bsm,mh->bsh", x, p["w_dt"])
+    return z, xs, bc, dt
+
+
+def mamba_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                  use_pallas: bool = False, unroll: bool = False
+                  ) -> jax.Array:
+    """Full-sequence Mamba2 block.  x: (B, S, M) -> (B, S, M)."""
+    Bt, S, M = x.shape
+    Din, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads,
+                    cfg.ssm_head_dim)
+    z, xs, bc, dt = _project(cfg, p, x)
+    xs, _ = _causal_conv(xs, p["conv_x"], p["conv_bx"])
+    bc, _ = _causal_conv(bc, p["conv_bc"], p["conv_bbc"])
+    xs = xs.reshape(Bt, S, H, P)
+    Bm = bc[..., :N]
+    Cm = bc[..., N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,) < 0
+    a = dt * A                                                    # log decay
+    xdt = xs.astype(jnp.float32) * dt[..., None]
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y, _ = kops.ssm_scan(xdt, a, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xdt, a, Bm, Cm, cfg.ssm_chunk, unroll=unroll)
+    y = y.astype(x.dtype) + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(Bt, S, Din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    return jnp.einsum("bsd,dm->bsm", y, p["w_out"])
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner),
+                            dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state),
+                             dtype),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                 cache: dict) -> Tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, M)."""
+    Bt, _, M = x.shape
+    Din, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads,
+                    cfg.ssm_head_dim)
+    z, xs, bc, dt = _project(cfg, p, x)
+    xs, new_conv_x = _causal_conv(xs, p["conv_x"], p["conv_bx"],
+                                  cache["conv_x"])
+    bc, new_conv_bc = _causal_conv(bc, p["conv_bc"], p["conv_bbc"],
+                                   cache["conv_bc"])
+    xs = xs[:, 0].reshape(Bt, H, P)
+    Bm = bc[:, 0, :N]
+    Cm = bc[:, 0, N:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = dt * A
+    xdt = xs.astype(jnp.float32) * dt[..., None]
+    y, new_state = ssd_decode_step(cache["state"], xdt, a, Bm, Cm)
+    y = y.astype(x.dtype) + xs * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(Bt, 1, Din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dm->bsm", y, p["w_out"])
+    return out, {"state": new_state, "conv_x": new_conv_x,
+                 "conv_bc": new_conv_bc}

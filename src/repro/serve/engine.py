@@ -1,0 +1,99 @@
+"""Serving engine: batched prefill + decode with per-family caches.
+
+``serve_step`` is the function the decode dry-run shapes lower: ONE new token
+for every sequence in the batch against a seq_len-deep cache (KV for
+attention blocks, ring-buffer of ``window`` entries for sliding-window
+models, constant-size recurrent state for SSM/RWKV).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig
+from repro.models import (init_caches, model_decode_step, model_forward)
+
+
+@dataclasses.dataclass
+class ServeState:
+    caches: dict
+    position: jax.Array          # () int32 — next write index
+    last_tokens: jax.Array       # (B, 1) most recent token per sequence
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_len: int) -> ServeState:
+    return ServeState(
+        caches=init_caches(cfg, batch, max_len),
+        position=jnp.zeros((), jnp.int32),
+        last_tokens=jnp.zeros((batch, 1), jnp.int32),
+    )
+
+
+def prefill(cfg: ModelConfig, run: RunConfig, params: dict,
+            batch: Dict[str, jax.Array], state: ServeState
+            ) -> Tuple[jax.Array, ServeState]:
+    """Process the full prompt, fill caches by replaying decode steps.
+
+    For throughput-critical paths the dry-run uses ``prefill_step`` (the
+    full-sequence forward); this incremental variant is the functional
+    reference that also leaves the caches ready for decode."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    def body(carry, t):
+        state_caches, pos = carry
+        logits, new_caches = model_decode_step(
+            cfg, run, params, tokens[:, t][:, None], pos, state_caches)
+        return (new_caches, pos + 1), logits[:, 0]
+
+    (caches, pos), all_logits = jax.lax.scan(
+        body, (state.caches, state.position), jnp.arange(S))
+    new_state = ServeState(caches, pos, tokens[:, -1:])
+    return all_logits.transpose(1, 0, 2), new_state
+
+
+def prefill_step(cfg: ModelConfig, run: RunConfig, params: dict,
+                 batch: Dict[str, jax.Array]) -> jax.Array:
+    """Full-sequence forward — what the prefill_32k dry-run shape lowers."""
+    logits, _ = model_forward(cfg, run, params, batch)
+    return logits
+
+
+def serve_step(cfg: ModelConfig, run: RunConfig, params: dict,
+               tokens: jax.Array, position: jax.Array, caches: dict,
+               *, greedy: bool = True, temperature: float = 1.0,
+               rng: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, dict]:
+    """One decode step for the whole batch: (B,1) token in, (B,1) token out."""
+    logits, caches = model_decode_step(cfg, run, params, tokens, position,
+                                       caches)
+    logits = logits[:, 0]                       # (B, V)
+    if greedy:
+        nxt = jnp.argmax(logits, axis=-1)
+    else:
+        nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+    return nxt[:, None].astype(jnp.int32), caches
+
+
+def generate(cfg: ModelConfig, run: RunConfig, params: dict,
+             prompt: jax.Array, max_new_tokens: int,
+             max_len: Optional[int] = None) -> jax.Array:
+    """Greedy generation: prefill the prompt then decode autoregressively."""
+    B, S = prompt.shape
+    max_len = max_len or (S + max_new_tokens)
+    state = init_serve_state(cfg, B, max_len)
+    _, state = prefill(cfg, run, params, {"tokens": prompt}, state)
+
+    def body(carry, _):
+        tok, pos, caches = carry
+        nxt, caches = serve_step(cfg, run, params, tok, pos, caches)
+        return (nxt, pos + 1, caches), nxt[:, 0]
+
+    (_, _, _), out = jax.lax.scan(
+        body, (state.last_tokens, state.position, state.caches),
+        None, length=max_new_tokens)
+    return out.T                                 # (B, max_new_tokens)

@@ -1,0 +1,11 @@
+"""Pytest path setup: make `benchmarks` (repo root) importable regardless of
+how pytest is invoked.  Deliberately does NOT touch XLA flags — tests must
+see the real single CPU device (the 512-device override lives only in
+repro.launch.dryrun / subprocess tests)."""
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)

@@ -1,0 +1,37 @@
+"""The paper's CIFAR CNN vehicle (benchmarks/cnn.py): shape/param fidelity
+and trainability (guards the §4.2 architecture reproduction)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.cnn import ImageTeacher, cnn_forward, cnn_loss, init_cnn
+
+
+def test_cnn_matches_paper_param_count():
+    p = init_cnn(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+    # paper §4.2: "~90K trainable parameters"
+    assert 85_000 <= n <= 95_000, n
+
+
+def test_cnn_forward_shape_and_finite():
+    p = init_cnn(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 32, 32))
+    logits = cnn_forward(p, x)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # init is calibrated cool (see init_cnn comment): logit std O(1)
+    assert float(jnp.std(logits)) < 3.0
+
+
+def test_cnn_learns_prototype_task():
+    task = ImageTeacher(n_train=256, n_test=128)
+    p = init_cnn(jax.random.PRNGKey(0))
+    g = jax.jit(jax.grad(cnn_loss))
+    x, y = jnp.asarray(task.x_train), jnp.asarray(task.y_train)
+    l0 = float(cnn_loss(p, (x, y)))
+    for i in range(60):
+        p = jax.tree.map(lambda a, b: a - 0.05 * b, p, g(p, (x, y)))
+    l1 = float(cnn_loss(p, (x, y)))
+    assert l1 < l0 * 0.5, (l0, l1)

@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) on the system's invariants:
+staleness bounds for arbitrary (λ, n), protocol algebra, fused-coefficient
+correctness vs brute-force momentum unrolls, runtime-model monotonicity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import RunConfig
+from repro.core import fused_coefficients, round_event_lrs, simulate_measure
+from repro.core import tradeoff as to
+
+SET = dict(deadline=None, max_examples=20, derandomize=True)
+
+
+# ---------------------------------------------------------------------------
+# staleness invariants (the paper's §5.1 claims, any configuration)
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=12, derandomize=True)
+@given(st.integers(2, 40), st.data())
+def test_softsync_staleness_invariants(lam, data):
+    n = data.draw(st.integers(1, lam))
+    run = RunConfig(protocol="softsync", n_softsync=n, n_learners=lam,
+                    minibatch=16, seed=lam * 100 + n)
+    # c = ⌊λ/n⌋ rounds: the protocol's EFFECTIVE splitting is n_eff = λ/c
+    # (e.g. λ=13, n=7 ⇒ c=1 ⇒ behaves as 13-softsync ≈ async; paper §3.1)
+    n_eff = lam / run.gradients_per_update
+    res = simulate_measure(run, steps=400)
+    vals = res.clock_log.all_staleness_values()
+    # staleness is nonnegative and hard-bounded with overwhelming probability
+    assert vals.min() >= 0
+    assert res.clock_log.fraction_exceeding(2 * n_eff + 2) < 5e-3
+    # ⟨σ⟩ tracks the effective splitting
+    m = res.clock_log.mean_staleness()
+    assert 0.3 * n_eff - 1 <= m <= 1.5 * n_eff + 1, (lam, n, n_eff, m)
+
+
+@settings(**SET)
+@given(st.integers(1, 30))
+def test_hardsync_always_zero_staleness(lam):
+    run = RunConfig(protocol="hardsync", n_learners=lam, minibatch=8)
+    res = simulate_measure(run, steps=20)
+    assert res.clock_log.mean_staleness() == 0.0
+
+
+@settings(**SET)
+@given(st.integers(2, 32))
+def test_async_equals_lambda_softsync(lam):
+    """Eq. 5: n = λ degenerates to the async update rule (c = 1)."""
+    a = RunConfig(protocol="async", n_learners=lam, minibatch=8)
+    s = RunConfig(protocol="softsync", n_softsync=lam, n_learners=lam,
+                  minibatch=8)
+    assert a.gradients_per_update == s.gradients_per_update == 1
+    assert a.expected_staleness == s.expected_staleness == float(lam)
+
+
+# ---------------------------------------------------------------------------
+# fused-coefficient algebra vs brute-force sequential momentum unroll
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.integers(1, 12), st.sampled_from([0.0, 0.5, 0.9]),
+       st.sampled_from(["const", "staleness_inverse", "per_gradient"]))
+def test_fused_coefficients_match_bruteforce(n, momentum, policy):
+    run = RunConfig(protocol="softsync", n_softsync=n, n_learners=max(n, 2),
+                    base_lr=0.1, lr_policy=policy,
+                    optimizer="momentum" if momentum else "sgd",
+                    momentum=momentum)
+    lrs = round_event_lrs(run, n)
+    coef, v0c = fused_coefficients(run, n)
+    rng = np.random.default_rng(n)
+    g = rng.normal(size=(n, 5))
+    v0 = rng.normal(size=5)
+    # brute force: v_j = m v_{j-1} + g_j ; θ -= lr_j v_j
+    theta = np.zeros(5)
+    v = v0.copy()
+    for j in range(n):
+        v = momentum * v + g[j]
+        theta -= lrs[j] * v
+    want = -(coef @ g) - v0c * v0
+    np.testing.assert_allclose(theta, want, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# runtime model monotonicity (the tradeoff curves' backbone)
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.sampled_from([4, 8, 32, 128]))
+def test_epoch_time_monotone_in_lambda(mu):
+    hw = to.calibrate_to_baseline()
+    times = [to.epoch_time("base", "softsync", mu, lam, hw)
+             for lam in (1, 2, 8, 30)]
+    assert all(a >= b * 0.999 for a, b in zip(times, times[1:])), times
+
+
+@settings(**SET)
+@given(st.integers(8, 60))
+def test_overlap_bounded_and_ordered(lam):
+    """Ordering holds once the PS tree amortizes (λ ≥ 8 = one full branch;
+    below that the tree's extra hop makes adv worse than base — real)."""
+    wl = to.WorkloadModel(model_bytes=300e6)
+    vals = [to.communication_overlap(a, 4, lam, wl=wl)
+            for a in ("base", "adv", "adv*")]
+    assert all(0.0 < v <= 1.0 for v in vals)
+    assert vals[0] <= vals[1] <= vals[2]
+
+
+# ---------------------------------------------------------------------------
+# μλ decomposition identity (Eq. 7): hardsync λ groups of μ == one batch μλ
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=6, derandomize=True)
+@given(st.sampled_from([(2, 8), (4, 4), (8, 2)]))
+def test_eq7_gradient_decomposition(shape):
+    lam, mu = shape
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (6, 3))
+    X = jax.random.normal(jax.random.PRNGKey(1), (lam * mu, 6))
+    Y = X @ W
+
+    def loss(p, x, y):
+        return jnp.mean((x @ p - y) ** 2)
+
+    g_full = jax.grad(loss)(jnp.zeros((6, 3)), X, Y)
+    g_groups = [jax.grad(loss)(jnp.zeros((6, 3)),
+                               X[l * mu:(l + 1) * mu], Y[l * mu:(l + 1) * mu])
+                for l in range(lam)]
+    g_mean = sum(g_groups) / lam
+    np.testing.assert_allclose(g_full, g_mean, atol=1e-5)

@@ -1,0 +1,34 @@
+"""Paper §5.5 optional features: warm-starting softsync from hardsync, and
+AdaGrad as the softsync stabilizer (the paper's ImageNet recipe)."""
+
+import numpy as np
+
+from repro.config import ModelConfig, RunConfig
+from repro.train.loop import train
+
+CFG = ModelConfig(name="w", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+
+
+def test_warmstart_runs_and_learns():
+    run = RunConfig(protocol="softsync", n_softsync=4, n_learners=4,
+                    minibatch=2, base_lr=0.02, lr_policy="staleness_inverse",
+                    optimizer="momentum", attn_q_chunk=32, attn_kv_chunk=32)
+    res = train(CFG, run, steps=40, batch=8, seq=32, eval_every=20,
+                warmstart_steps=10)
+    assert np.isfinite(res.history[-1]["ce"])
+    assert res.history[-1]["ce"] < 5.0   # below ~uniform after warm+train
+
+
+def test_adagrad_softsync_stable():
+    """The paper uses AdaGrad for 1-softsync ImageNet stability; the adaptive
+    denominator must keep high-staleness training finite at an LR where it
+    matters."""
+    run = RunConfig(protocol="softsync", n_softsync=4, n_learners=4,
+                    minibatch=2, base_lr=0.05, lr_policy="staleness_inverse",
+                    optimizer="adagrad", attn_q_chunk=32, attn_kv_chunk=32)
+    res = train(CFG, run, steps=40, batch=8, seq=32, eval_every=20)
+    assert np.isfinite(res.history[-1]["ce"])
+    # AdaGrad's shrinking step keeps it stable (finite, below uniform ln 64);
+    # convergence speed is not the claim here
+    assert res.history[-1]["ce"] < np.log(64)
