@@ -2,21 +2,18 @@
 training (clocks, protocols, LR modulation, event simulator, and the
 TPU-native distributed engines)."""
 from repro.core.clock import StalenessRecord, VectorClockLog
-from repro.core.protocols import (ParameterServerState, sgd_apply,
-                                  momentum_apply, adagrad_apply, tree_mean)
+from repro.core.protocols import ParameterServerState, tree_mean
 from repro.core.lr_policies import make_lr_policy, hardsync_lr, softsync_lr
 from repro.core.simulator import simulate, simulate_measure, SimResult
 from repro.core.distributed import (make_train_step, make_hardsync_step,
                                     make_softsync_step, init_opt_state,
-                                    apply_optimizer, round_event_lrs,
-                                    fused_coefficients)
+                                    round_event_lrs, fused_coefficients)
 
 __all__ = [
     "StalenessRecord", "VectorClockLog", "ParameterServerState",
-    "sgd_apply", "momentum_apply", "adagrad_apply", "tree_mean",
+    "tree_mean",
     "make_lr_policy", "hardsync_lr", "softsync_lr",
     "simulate", "simulate_measure", "SimResult",
     "make_train_step", "make_hardsync_step", "make_softsync_step",
-    "init_opt_state", "apply_optimizer", "round_event_lrs",
-    "fused_coefficients",
+    "init_opt_state", "round_event_lrs", "fused_coefficients",
 ]

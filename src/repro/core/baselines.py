@@ -36,7 +36,7 @@ import numpy as np
 from repro.config import RunConfig
 from repro.core.clock import VectorClockLog
 from repro.core.lr_policies import make_lr_policy
-from repro.core.protocols import sgd_apply
+from repro.optim import sgd_step
 from repro.core.simulator import SimResult, _default_duration_sampler
 
 
@@ -88,7 +88,7 @@ def simulate_ssp(run: RunConfig, *, steps: int, slack: int,
             lr = lr_policy(timestamp, [pulled_ts[li]])
             if isinstance(lr, list):
                 lr = lr[0]
-            params = sgd_apply(params, grad, lr)
+            params = sgd_step(params, grad, lr)
         timestamp += 1
         updates += 1
         log.record(timestamp, [pulled_ts[li]])
@@ -136,7 +136,7 @@ def simulate_easgd(run: RunConfig, *, steps: int, rho: float = 0.1,
         t, _, li = heapq.heappop(heap)
         mb += 1
         grad = grad_fn(local[li], batch_fn(li, done_mb[li]))
-        local[li] = sgd_apply(local[li], grad, eta)
+        local[li] = sgd_step(local[li], grad, eta)
         done_mb[li] += 1
         since_comm[li] += 1
         if since_comm[li] >= comm_every:

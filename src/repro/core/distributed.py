@@ -20,10 +20,15 @@ Two engines:
   velocity coefficients), the n sequential events collapse into ONE
   staleness-weighted gradient combination, computable as a single backward
   pass over a per-sample-weighted loss ⇒ one all-reduce per round, the same
-  collective cost as hardsync.  For momentum the velocity is updated once per
-  round with the staleness-weighted mean gradient (round-level momentum —
-  exact for SGD, a documented approximation for momentum; see
-  EXPERIMENTS.md §Perf for the convergence check).
+  collective cost as hardsync.  For momentum the round applies the exact
+  affine fold (repro.optim.sequential_fold): θ carries the folded
+  velocity-decay term v0_coef and v advances by (m^n, Σ m^{n−1−i}) — exact
+  whenever the n group-mean gradients coincide, a documented round-level
+  approximation otherwise (see EXPERIMENTS.md §Perf for the convergence
+  check).
+
+Every applyUpdate routes through ``repro.optim`` (DESIGN.md §3) — this
+module owns only the round structure and per-event LR schedule.
 """
 
 from __future__ import annotations
@@ -35,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import optim
 from repro.config import ModelConfig, RunConfig
 from repro.core.lr_policies import hardsync_lr, softsync_lr
 
@@ -62,82 +68,27 @@ def fused_coefficients(run: RunConfig, n: int) -> Tuple[np.ndarray, float]:
     """Fold n sequential momentum updates into one combination.
 
     Sequential: v_j = m·v_{j-1} + g_j ;  θ ← θ − lr_j·v_j   (j = 0..n−1)
-    ⇒ θ_n = θ_0 − (Σ_j lr_j m^{j+1−?}) … − Σ_i (Σ_{j≥i} lr_j m^{j−i}) g_i
+    ⇒ θ_n = θ_0 − Σ_i (Σ_{j≥i} lr_j m^{j−i}) g_i − (Σ_j lr_j m^{j+1}) v_0
     Returns (per-group gradient coefficients c_i for the θ update,
-    velocity-decay coefficient Σ_j lr_j m^{j}) — used by the fused engine.
-    For plain SGD (m = 0) this is exactly the per-event LRs.
+    velocity-carry coefficient Σ_j lr_j m^{j+1}) — the fold algebra lives in
+    ``repro.optim.sequential_fold``.  For plain SGD (m = 0) the coefficients
+    are exactly the per-event LRs.
     """
+    fold = _round_fold(run, n)
+    return np.asarray(fold.theta_coef), fold.v0_coef
+
+
+def _round_fold(run: RunConfig, n: int) -> optim.RoundFold:
     lrs = round_event_lrs(run, n)
     m = run.momentum if run.optimizer == "momentum" else 0.0
-    coef = np.zeros((n,))
-    for i in range(n):
-        for j in range(i, n):
-            coef[i] += lrs[j] * (m ** (j - i))
-    v0_coef = float(sum(lrs[j] * (m ** (j + 1)) for j in range(n)))
-    return coef, v0_coef
+    return optim.sequential_fold(lrs, m)
 
 
 # ---------------------------------------------------------------------------
-# optimizer state
+# optimizer state (all applyUpdate math lives in repro.optim)
 # ---------------------------------------------------------------------------
 def init_opt_state(run: RunConfig, params) -> dict:
-    if run.optimizer == "momentum":
-        return {"velocity": jax.tree.map(jnp.zeros_like, params)}
-    if run.optimizer == "adagrad":
-        return {"accum": jax.tree.map(
-            lambda p: jnp.zeros_like(p, jnp.float32), params)}
-    if run.optimizer == "adamw":
-        return {"mu": jax.tree.map(jnp.zeros_like, params),
-                "nu": jax.tree.map(
-                    lambda p: jnp.zeros_like(p, jnp.float32), params),
-                "count": jnp.zeros((), jnp.int32)}
-    return {}
-
-
-def apply_optimizer(run: RunConfig, params, opt, grads, lr):
-    """One applyUpdate with the configured optimizer.  lr may be a traced
-    scalar (sequential engine scans over per-event LRs)."""
-    if run.optimizer == "momentum":
-        v = jax.tree.map(lambda v, g: run.momentum * v + g.astype(v.dtype),
-                         opt["velocity"], grads)
-        params = jax.tree.map(
-            lambda p, v: (p.astype(jnp.float32)
-                          - lr * v.astype(jnp.float32)).astype(p.dtype),
-            params, v)
-        return params, {"velocity": v}
-    if run.optimizer == "adagrad":
-        a = jax.tree.map(lambda a, g: a + jnp.square(g.astype(a.dtype)),
-                         opt["accum"], grads)
-        params = jax.tree.map(
-            lambda p, g, a: (p.astype(jnp.float32)
-                             - lr * g.astype(jnp.float32)
-                             / (jnp.sqrt(a.astype(jnp.float32)) + 1e-8)
-                             ).astype(p.dtype),
-            params, grads, a)
-        return params, {"accum": a}
-    if run.optimizer == "adamw":
-        b1, b2, eps = 0.9, 0.95, 1e-8
-        cnt = opt["count"] + 1
-        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
-                          opt["mu"], grads)
-        nu = jax.tree.map(
-            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(n.dtype)),
-            opt["nu"], grads)
-        c1 = 1 - b1 ** cnt.astype(jnp.float32)
-        c2 = 1 - b2 ** cnt.astype(jnp.float32)
-        params = jax.tree.map(
-            lambda p, m, n: (p - lr * ((m.astype(jnp.float32) / c1)
-                             / (jnp.sqrt(n / c2) + eps)
-                             + run.weight_decay * p.astype(jnp.float32))
-                             ).astype(p.dtype),
-            params, mu, nu)
-        return params, {"mu": mu, "nu": nu, "count": cnt}
-    # plain SGD
-    params = jax.tree.map(
-        lambda p, g: (p.astype(jnp.float32)
-                      - lr * g.astype(jnp.float32)).astype(p.dtype),
-        params, grads)
-    return params, {}
+    return optim.init_state(optim.spec_from_run(run), params)
 
 
 # ---------------------------------------------------------------------------
@@ -191,11 +142,12 @@ def make_hardsync_step(run: RunConfig, loss_fn: Callable):
     """Standard data-parallel step: Δθ = mean over the global batch ≡ Eq. 3.
     LR follows the paper's hardsync scaling when lr_policy = sqrt_scale."""
     lr = hardsync_lr(run) if run.lr_policy == "sqrt_scale" else run.base_lr
+    spec = optim.spec_from_run(run)
 
     def step(params, opt, batch):
         loss, metrics, grads = grad_with_accum(
             loss_fn, params, batch, run.num_microbatches)
-        params_new, opt_new = apply_optimizer(run, params, opt, grads, lr)
+        params_new, opt_new = optim.apply_single(spec, params, opt, grads, lr)
         return params_new, opt_new, metrics
 
     return step
@@ -215,6 +167,7 @@ def make_softsync_step(run: RunConfig, loss_fn: Callable,
         return _make_fused_softsync_step(run, loss_fn, n)
 
     lrs = jnp.asarray(round_event_lrs(run, n), jnp.float32)
+    spec = optim.spec_from_run(run)
 
     def step(params, opt, batch):
         grouped = jax.tree.map(
@@ -226,7 +179,7 @@ def make_softsync_step(run: RunConfig, loss_fn: Callable,
             group_batch, lr = inp
             loss, metrics, grads = grad_with_accum(
                 loss_fn, theta0, group_batch, run.num_microbatches)
-            params, opt = apply_optimizer(run, params, opt, grads, lr)
+            params, opt = optim.apply_single(spec, params, opt, grads, lr)
             return (params, opt, loss_acc + loss), metrics
 
         (params, opt, loss_sum), metrics = jax.lax.scan(
@@ -243,12 +196,17 @@ def _make_fused_softsync_step(run: RunConfig, loss_fn: Callable, n: int):
 
     The per-group θ-update coefficients c_i (fused_coefficients) become
     per-sample loss weights w_s = n·c_{g(s)} / Σc  scaled so that the single
-    mean gradient equals Σ_i c_i · mean_{s∈i}(g_s) / (Σ_i c_i) — then the
-    whole round is one apply with lr = Σ_i c_i.
+    mean gradient equals Σ_i c_i · mean_{s∈i}(g_s) / (Σ_i c_i).  SGD /
+    adagrad / adamw then do one apply with lr = Σ_i c_i; momentum applies
+    the exact affine round fold — θ gets the v0_coef velocity carry and v
+    advances by (m^n, Σ m^{n−1−i}) — so round-to-round momentum matches the
+    sequential engine whenever the group-mean gradients coincide.
     """
-    coef, v0_coef = fused_coefficients(run, n)
+    fold = _round_fold(run, n)
+    coef = np.asarray(fold.theta_coef)
     total = float(coef.sum())
     group_w = jnp.asarray(coef / coef.mean(), jnp.float32)   # mean-1 weights
+    spec = optim.spec_from_run(run)
 
     def step(params, opt, batch):
         B = jax.tree.leaves(batch)[0].shape[0]
@@ -257,9 +215,12 @@ def _make_fused_softsync_step(run: RunConfig, loss_fn: Callable, n: int):
             loss_fn, params, batch, run.num_microbatches,
             sample_weights=per_sample_w)
         # grads is the weighted MEAN (1/n)Σ_i (c_i/c̄)·mean_i = Σ_i c_i·mean_i/Σc,
-        # so one apply with lr = Σ_i c_i reproduces θ₀ − Σ_i c_i·mean_i exactly.
-        lr = total
-        params, opt = apply_optimizer(run, params, opt, grads, lr)
+        # so applying with total weight Σ_i c_i reproduces θ₀ − Σ_i c_i·mean_i.
+        if run.optimizer == "momentum":
+            params, opt = optim.apply_round_folded(spec, params, opt, grads,
+                                                   fold)
+        else:
+            params, opt = optim.apply_single(spec, params, opt, grads, total)
         return params, opt, metrics
 
     return step

@@ -1,14 +1,19 @@
 """Synchronization-protocol update rules (paper §3.1, Eqs. 3–5).
 
-These are pure pytree functions shared by the event-driven simulator and the
-distributed (pjit/shard_map) runtime:
+These are shared by the event-driven simulator and the distributed
+(pjit/shard_map) runtime:
 
 * hardsync  — Δθ = (1/λ) Σ_{l=1..λ} Δθ_l          (Eq. 3)
 * n-softsync — Δθ = (1/c) Σ_{l=1..c} Δθ_l, c=⌊λ/n⌋ (Eq. 5)
 * async     — Δθ = Δθ_l                            (Eq. 4; c = 1)
 
-All three reduce to "average c gradients, scale by α, subtract" — so one
-``apply_update`` with the protocol deciding c and the LR policy deciding α.
+All three reduce to "combine c gradients, apply one optimizer step" — the
+unified staleness-aware update in ``repro.optim`` (DESIGN.md §3).  This
+module keeps the protocol bookkeeping (arrival batching, timestamps, the
+scalar-vs-per-gradient LR contract) and routes every applyUpdate through
+that subsystem; by default the PS fires the fused Pallas ``ps_update``
+kernel (interpret mode off-TPU), so the simulator's measured hot path IS
+the optimized one.
 """
 
 from __future__ import annotations
@@ -17,6 +22,9 @@ from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
 
 
 def tree_mean(grads: Sequence) -> object:
@@ -25,56 +33,44 @@ def tree_mean(grads: Sequence) -> object:
     return jax.tree.map(lambda *g: sum(g) / n, *grads)
 
 
-def tree_weighted_sum(grads: Sequence, weights: Sequence[float]) -> object:
-    """Σ w_g · grad_g — used by the fused staleness-weighted reduction."""
-    return jax.tree.map(
-        lambda *g: sum(w * x for w, x in zip(weights, g)), *grads)
-
-
-def sgd_apply(params, grad, lr: float):
-    """applyUpdate: θ ← θ − α·Δθ  (Eq. 1c)."""
-    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grad)
-
-
-def momentum_apply(params, velocity, grad, lr: float, momentum: float):
-    """Momentum-SGD applyUpdate (the paper's optimizer, §4.2)."""
-    new_v = jax.tree.map(lambda v, g: momentum * v + g.astype(v.dtype),
-                         velocity, grad)
-    new_p = jax.tree.map(lambda p, v: p - lr * v.astype(p.dtype),
-                         params, new_v)
-    return new_p, new_v
-
-
-def adagrad_apply(params, accum, grad, lr: float, eps: float = 1e-8):
-    """AdaGrad applyUpdate (used by the paper for ImageNet 1-softsync)."""
-    new_a = jax.tree.map(lambda a, g: a + jnp.square(g.astype(a.dtype)),
-                         accum, grad)
-    new_p = jax.tree.map(
-        lambda p, g, a: p - lr * g.astype(p.dtype)
-        / (jnp.sqrt(a.astype(p.dtype)) + eps),
-        params, grad, new_a)
-    return new_p, new_a
-
-
 class ParameterServerState:
     """Host-side PS used by the event-driven simulator (Rudra-base logic).
 
     Holds the master weights + scalar timestamp, accumulates pushed gradients
     and fires an update every ``c`` arrivals, exactly like the paper's PS.
+    The update itself is one call into ``repro.optim.apply_update``:
+
+    * scalar LR from the policy  → ``combine`` mode (Eq. 3/5: average the c
+      gradients, one optimizer event);
+    * per-gradient LR list (footnote 3) → ``sequential`` mode: c optimizer
+      events, event i applying G_i/c with its own α_i, so momentum/adagrad
+      state advances per gradient instead of being silently bypassed.
+
+    ``backend`` picks the optim backend; the default "pallas" runs the fused
+    kernel over the whole concatenated model per update.
     """
 
     def __init__(self, params, c: int, optimizer: str = "sgd",
-                 momentum: float = 0.9):
+                 momentum: float = 0.9, weight_decay: float = 0.0,
+                 backend: str = "pallas"):
         self.params = params
         self.timestamp = 0
         self.c = c
         self.optimizer = optimizer
         self.momentum = momentum
+        self.backend = backend
+        self.spec = optim.UpdateSpec(optimizer=optimizer, momentum=momentum,
+                                     weight_decay=weight_decay)
+        self.opt_state = optim.init_state(self.spec, params)
         self._pending: List = []            # (grad, grad_timestamp)
-        if optimizer == "momentum":
-            self.velocity = jax.tree.map(jnp.zeros_like, params)
-        elif optimizer == "adagrad":
-            self.accum = jax.tree.map(jnp.zeros_like, params)
+
+    @property
+    def velocity(self):
+        return self.opt_state.get("velocity")
+
+    @property
+    def accum(self):
+        return self.opt_state.get("accum")
 
     def push_gradient(self, grad, grad_timestamp: int, lr_for_update):
         """Receive one gradient.  Returns the StalenessRecord-compatible
@@ -88,20 +84,19 @@ class ParameterServerState:
         grads = [g for g, _ in self._pending]
         clocks = [t for _, t in self._pending]
         self._pending = []
+        c = len(grads)
         lr = lr_for_update(self.timestamp, clocks)
-        if callable(getattr(lr, "__iter__", None)) or isinstance(lr, (list,)):
-            # per-gradient LRs: weighted sum instead of uniform mean
-            delta = tree_weighted_sum(grads, [w / len(grads) for w in lr])
-            self.params = sgd_apply(self.params, delta, 1.0)
+        if np.ndim(lr) > 0:
+            # footnote 3: per-gradient α_i ⇒ c sequential optimizer events
+            # (any length-c sequence/array counts, incl. jax arrays)
+            mode = "sequential"
+            lrs = jnp.asarray(lr, jnp.float32)
         else:
-            delta = tree_mean(grads)
-            if self.optimizer == "momentum":
-                self.params, self.velocity = momentum_apply(
-                    self.params, self.velocity, delta, lr, self.momentum)
-            elif self.optimizer == "adagrad":
-                self.params, self.accum = adagrad_apply(
-                    self.params, self.accum, delta, lr)
-            else:
-                self.params = sgd_apply(self.params, delta, lr)
+            mode = "combine"
+            lrs = jnp.full((c,), float(lr), jnp.float32)
+        coef = jnp.full((c,), 1.0 / c, jnp.float32)
+        self.params, self.opt_state = optim.apply_update(
+            self.spec, self.params, self.opt_state, grads, coef, lrs,
+            mode=mode, backend=self.backend)
         self.timestamp += 1
         return clocks

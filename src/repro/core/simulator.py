@@ -28,13 +28,12 @@ import dataclasses
 import heapq
 from typing import Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro.config import RunConfig
 from repro.core.clock import VectorClockLog
 from repro.core.lr_policies import make_lr_policy
-from repro.core.protocols import ParameterServerState, tree_mean
+from repro.core.protocols import ParameterServerState
 
 
 @dataclasses.dataclass
@@ -85,24 +84,19 @@ def simulate(run: RunConfig,
     lr_policy = make_lr_policy(run)
     log = VectorClockLog()
 
-    sgd_mode = grad_fn is not None
-    if not sgd_mode:
+    if grad_fn is None:                       # measure mode
         return simulate_measure(run, steps=steps,
                                 duration_sampler=duration_sampler)
-    ps = None
-    if sgd_mode:
-        ps = ParameterServerState(init_params, run.gradients_per_update,
-                                  optimizer=run.optimizer,
-                                  momentum=run.momentum)
+    # everything below is sgd mode: real gradients through the unified PS
+    ps = ParameterServerState(init_params, run.gradients_per_update,
+                              optimizer=run.optimizer,
+                              momentum=run.momentum,
+                              weight_decay=run.weight_decay)
 
     # ---------------- hardsync: barrier rounds -----------------------------
     if run.protocol == "hardsync":
-        import jax.numpy as jnp
-        from repro.core.protocols import momentum_apply, sgd_apply
-        params = init_params
-        velocity = None
-        if sgd_mode and run.optimizer == "momentum":
-            velocity = jax.tree.map(jnp.zeros_like, params)
+        # A barrier round is just "the PS fires after all λ arrivals" — the
+        # same unified applyUpdate (repro.optim) as softsync, with c = λ.
         t = 0.0
         history = []
         mb = 0
@@ -110,30 +104,21 @@ def simulate(run: RunConfig,
             durations = [duration_sampler(rng, run.minibatch)
                          for _ in range(lam)]
             t += max(durations)                       # barrier
-            if sgd_mode:
-                grads = [grad_fn(params, batch_fn(l, step))
-                         for l in range(lam)]
-                delta = tree_mean(grads)
-                lr = lr_policy(step, [step] * lam)
-                if run.optimizer == "momentum":
-                    params, velocity = momentum_apply(
-                        params, velocity, delta, lr, run.momentum)
-                else:
-                    params = sgd_apply(params, delta, lr)
+            params0 = ps.params
+            for l in range(lam):
+                ps.push_gradient(grad_fn(params0, batch_fn(l, step)),
+                                 step, lr_policy)
             mb += lam
             log.record(step + 1, [step] * lam)        # σ = 0 by construction
-            if sgd_mode and eval_fn and eval_every and \
-                    (step + 1) % eval_every == 0:
+            if eval_fn and eval_every and (step + 1) % eval_every == 0:
                 history.append({"update": step + 1, "time": t,
-                                **eval_fn(params)})
-        return SimResult(log, steps, t, mb, params,
-                         history if sgd_mode else None)
+                                **eval_fn(ps.params)})
+        return SimResult(log, steps, t, mb, ps.params, history)
 
     # ---------------- softsync / async: event queue -------------------------
     learners = [LearnerState(i) for i in range(lam)]
-    if sgd_mode:
-        for l in learners:
-            l.params = ps.params
+    for l in learners:
+        l.params = ps.params
     # event heap: (push_completion_time, tiebreak, learner_idx)
     heap = []
     for l in learners:
@@ -168,9 +153,7 @@ def simulate(run: RunConfig,
         heapq.heappush(
             heap, (t + duration_sampler(rng, run.minibatch), mb + lam, li))
 
-    return SimResult(log, updates, t, mb,
-                     ps.params if sgd_mode else None,
-                     history if sgd_mode else None)
+    return SimResult(log, updates, t, mb, ps.params, history)
 
 
 def simulate_measure(run: RunConfig, *, steps: int,

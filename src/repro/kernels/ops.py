@@ -40,6 +40,15 @@ def ps_update(w_flat, v_flat, g_flat, coef, *, momentum: float = 0.9,
                               interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "mode", "row_block"))
+def ps_apply(w_flat, s_flat, g_flat, coef, lrs, *, spec, mode: str = "combine",
+             row_block=None):
+    """General fused applyUpdate (sgd/momentum/adagrad; see repro.optim)."""
+    return _ps.ps_apply(w_flat, s_flat, g_flat, coef, lrs, spec=spec,
+                        mode=mode, row_block=row_block,
+                        interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssm_scan(x, a, Bm, Cm, *, chunk: int = 256):
     return _ssm.ssm_scan(x, a, Bm, Cm, chunk=chunk, interpret=_interpret())

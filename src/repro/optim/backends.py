@@ -1,0 +1,202 @@
+"""Three interchangeable backends for the unified applyUpdate (DESIGN.md §3).
+
+* ``reference`` — eager pure-jnp, leaf-by-leaf Python loop.  The oracle.
+* ``jit``       — the same pytree math under ``jax.jit`` (cached per
+  (spec, mode, c)).  What the SPMD engines trace into their step functions.
+* ``pallas``    — every leaf concatenated into one flat fp32 buffer and the
+  whole model updated by a single fused ``ps_update`` kernel launch
+  (interpret mode off-TPU).  The PS hot path.
+
+All three execute :func:`repro.optim.spec.update_event` — the backends differ
+only in how they schedule it over memory, never in the math.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import flatten
+from repro.optim.spec import RoundFold, UpdateSpec, update_event
+
+BACKENDS = ("reference", "jit", "pallas")
+
+# host-side count of fused-kernel dispatches (tests/benchmarks assert the
+# Pallas path really is the one being exercised).
+pallas_dispatches = 0
+
+
+def _f32(tree):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+
+def _combine(grads: Sequence, coef) -> object:
+    """Σ_i coef_i·G_i in fp32 — the staleness-weighted sumGradients."""
+    return jax.tree.map(
+        lambda *g: sum(coef[i] * g[i].astype(jnp.float32)
+                       for i in range(len(g))), *grads)
+
+
+# ---------------------------------------------------------------------------
+# pytree event application (reference + jit backends)
+# ---------------------------------------------------------------------------
+def _adamw_event(spec: UpdateSpec, params, state, g32, lr):
+    b1, b2, eps = spec.beta1, spec.beta2, spec.eps
+    cnt = state["count"] + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], g32)
+    nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g),
+                      state["nu"], g32)
+    c1 = 1 - b1 ** cnt.astype(jnp.float32)
+    c2 = 1 - b2 ** cnt.astype(jnp.float32)
+    new_p = jax.tree.map(
+        lambda p, m, n: (p.astype(jnp.float32)
+                         - lr * ((m / c1) / (jnp.sqrt(n / c2) + eps)
+                                 + spec.weight_decay * p.astype(jnp.float32))
+                         ).astype(p.dtype),
+        params, mu, nu)
+    return new_p, {"mu": mu, "nu": nu, "count": cnt}
+
+
+def apply_single(spec: UpdateSpec, params, state, grad, lr):
+    """ONE optimizer event with gradient ``grad`` (pytree) and lr ``lr``.
+
+    Pure and jit-friendly (``lr`` may be traced) — this is what the
+    distributed engines inline into their step functions."""
+    g32 = _f32(grad)
+    if spec.optimizer == "adamw":
+        return _adamw_event(spec, params, state, g32, lr)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(g32)
+    if spec.optimizer == "sgd":
+        new_p = [update_event(spec, p.astype(jnp.float32), None, g, lr)[0]
+                 .astype(p.dtype) for p, g in zip(flat_p, flat_g)]
+        return jax.tree_util.tree_unflatten(treedef, new_p), state
+    key = spec.state_keys[0]
+    flat_s = jax.tree_util.tree_leaves(state[key])
+    res = [update_event(spec, p.astype(jnp.float32), s.astype(jnp.float32),
+                        g, lr)
+           for p, s, g in zip(flat_p, flat_s, flat_g)]
+    new_p = jax.tree_util.tree_unflatten(
+        treedef, [r[0].astype(p.dtype) for r, p in zip(res, flat_p)])
+    new_s = jax.tree_util.tree_unflatten(
+        treedef, [r[1].astype(s.dtype) for r, s in zip(res, flat_s)])
+    return new_p, {key: new_s}
+
+
+def apply_update_tree(spec: UpdateSpec, params, state, grads: Sequence,
+                      coef, lrs, mode: str = "combine"):
+    """The unified update on pytrees (reference semantics, jittable).
+
+    ``grads`` is a sequence of c gradient pytrees; ``coef``/``lrs`` are
+    length-c vectors (combination weights, per-event LRs)."""
+    c = len(grads)
+    if mode == "combine":
+        return apply_single(spec, params, state, _combine(grads, coef),
+                            lrs[0])
+    if mode != "sequential":
+        raise ValueError(f"unknown mode {mode!r}")
+    for i in range(c):
+        gi = jax.tree.map(lambda g: coef[i] * g.astype(jnp.float32),
+                          grads[i])
+        params, state = apply_single(spec, params, state, gi, lrs[i])
+    return params, state
+
+
+def apply_round_folded(spec: UpdateSpec, params, state, ghat,
+                       fold: RoundFold):
+    """Apply a whole round of c sequential momentum events in one shot, given
+    only their weighted-mean gradient ``ghat`` (the fused engine's single
+    backward pass).  θ gets the exact affine fold — including the
+    ``v0_coef`` carry from the incoming velocity that the seed engine
+    dropped — and v advances by (v_decay, v_gain)."""
+    if spec.optimizer != "momentum":
+        raise ValueError("apply_round_folded is momentum-only; other "
+                         "optimizers use apply_single with the folded lr")
+    total = float(np.sum(fold.theta_coef))
+    g32 = _f32(ghat)
+    v = state["velocity"]
+    new_v = jax.tree.map(lambda vv, g: fold.v_decay * vv + fold.v_gain * g,
+                         v, g32)
+    new_p = jax.tree.map(
+        lambda p, g, vv: (p.astype(jnp.float32) - total * g
+                          - fold.v0_coef * vv).astype(p.dtype),
+        params, g32, v)
+    return new_p, {"velocity": new_v}
+
+
+# ---------------------------------------------------------------------------
+# pallas backend: one fused kernel launch over the concatenated model
+# ---------------------------------------------------------------------------
+def apply_update_flat(spec: UpdateSpec, params, state, grads: Sequence,
+                      coef, lrs, mode: str = "combine",
+                      interpret: bool = True):
+    """Flatten → single ``ps_update`` pallas_call → unflatten."""
+    from repro.kernels import ps_update as _psu   # lazy: breaks import cycle
+
+    p_layout = flatten.layout_of(params)
+    w = flatten.tree_to_flat(params)
+    g = flatten.stack_grads_flat(grads)
+    if spec.optimizer == "sgd":
+        w2, _ = _psu.ps_apply(w, None, g, coef, lrs, spec=spec, mode=mode,
+                              interpret=interpret)
+        return flatten.flat_to_tree(w2, p_layout), state
+    key = spec.state_keys[0]
+    s_layout = flatten.layout_of(state[key])
+    s = flatten.tree_to_flat(state[key])
+    w2, s2 = _psu.ps_apply(w, s, g, coef, lrs, spec=spec, mode=mode,
+                           interpret=interpret)
+    return (flatten.flat_to_tree(w2, p_layout),
+            {key: flatten.flat_to_tree(s2, s_layout)})
+
+
+# ---------------------------------------------------------------------------
+# host-facing dispatch (jit-cached per static configuration)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _jitted(spec: UpdateSpec, mode: str, c: int, backend: str,
+            interpret: bool):
+    if backend == "pallas":
+        def fn(params, state, grads, coef, lrs):
+            return apply_update_flat(spec, params, state, list(grads),
+                                     coef, lrs, mode, interpret)
+    else:
+        def fn(params, state, grads, coef, lrs):
+            return apply_update_tree(spec, params, state, list(grads),
+                                     coef, lrs, mode)
+    return jax.jit(fn)
+
+
+def apply_update(spec: UpdateSpec, params, state, grads: Sequence,
+                 coef, lrs, *, mode: str = "combine", backend: str = "jit",
+                 interpret: Optional[bool] = None):
+    """The one entry point every consumer routes through.
+
+    ``grads``: sequence of c gradient pytrees.  ``coef``: (c,) combination
+    weights.  ``lrs``: (c,) per-event LRs (``combine`` mode reads lrs[0]).
+    """
+    global pallas_dispatches
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    grads = tuple(grads)
+    coef = jnp.asarray(coef, jnp.float32)
+    lrs = jnp.asarray(lrs, jnp.float32)
+    if backend == "reference":
+        return apply_update_tree(spec, params, state, list(grads),
+                                 coef, lrs, mode)
+    if backend == "pallas" and not spec.kernel_supported:
+        backend = "jit"                      # adamw: pytree path
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if backend == "pallas":
+        pallas_dispatches += 1
+    fn = _jitted(spec, mode, len(grads), backend, bool(interpret))
+    return fn(params, state, grads, coef, lrs)
+
+
+def sgd_step(params, grad, lr):
+    """Convenience plain-SGD event (baseline simulators)."""
+    return apply_single(UpdateSpec(optimizer="sgd"), params, {}, grad, lr)[0]

@@ -1,0 +1,61 @@
+"""Pytree ⇄ single flat fp32 buffer (the Pallas backend's layout).
+
+The fused ``ps_update`` kernel wants ONE contiguous (D,) parameter vector so
+the whole model updates in a single ``pallas_call`` — one grid, one HBM pass
+— instead of a Python loop of per-leaf launches.  These helpers concatenate
+every leaf (ravelled, cast to fp32) and split/reshape/cast back afterwards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeLayout:
+    """Static description of a flattened pytree (shapes, dtypes, offsets)."""
+
+    treedef: object
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[object, ...]
+    sizes: Tuple[int, ...]
+
+    @property
+    def total(self) -> int:
+        return int(sum(self.sizes))
+
+
+def layout_of(tree) -> TreeLayout:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return TreeLayout(
+        treedef=treedef,
+        shapes=tuple(tuple(l.shape) for l in leaves),
+        dtypes=tuple(l.dtype for l in leaves),
+        sizes=tuple(int(np.prod(l.shape)) if l.shape else 1 for l in leaves))
+
+
+def tree_to_flat(tree) -> jax.Array:
+    """Concatenate all leaves into one fp32 (D,) vector."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def stack_grads_flat(grads: Sequence) -> jax.Array:
+    """c gradient pytrees → one (c, D) fp32 matrix."""
+    return jnp.stack([tree_to_flat(g) for g in grads])
+
+
+def flat_to_tree(flat: jax.Array, layout: TreeLayout):
+    """Split a (D,) vector back into the original tree (leaf dtypes restored)."""
+    out: List = []
+    off = 0
+    for shape, dtype, size in zip(layout.shapes, layout.dtypes, layout.sizes):
+        out.append(flat[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(layout.treedef, out)

@@ -1,0 +1,158 @@
+"""The single source of truth for staleness-aware applyUpdate (DESIGN.md §3).
+
+Every synchronization protocol in the paper — hardsync (Eq. 3), n-softsync
+(Eq. 5), async (Eq. 4) — reduces at the parameter server to the same step:
+a staleness-weighted combination of the c pending gradients folded into one
+optimizer event,
+
+    θ' = θ − α · Σ_i coef_i · G_i        (+ optimizer state update)
+
+with the staleness-dependent LR modulation of Eq. 6 / footnote 3 deciding α
+(scalar) or the per-gradient α_i (Zhang et al., "Staleness-aware Async-SGD",
+2016).  This module defines that update rule ONCE:
+
+* :class:`UpdateSpec`   — which optimizer + its hyperparameters.
+* :func:`update_event`  — one optimizer event on plain fp32 arrays.  This
+  exact function body is what the Pallas ``ps_update`` kernel executes per
+  tile and what the pytree backends map over leaves — there is no second
+  implementation of the math anywhere in the repo.
+* :func:`init_state`    — optimizer state pytree (fp32 accumulators).
+* :func:`sequential_fold` — the algebra that folds c *sequential* momentum
+  events (per-gradient LRs) into one affine update, used by the fused
+  softsync engine and by ``fused_coefficients``.
+
+Two update modes (both supported by every backend, see ``backends.py``):
+
+* ``combine``    — g = Σ_i coef_i·G_i, then ONE optimizer event with lr[0].
+  This is the paper's Eq. 3/5 semantics (average, then apply).
+* ``sequential`` — c optimizer events, event i applying gradient
+  coef_i·G_i with its own lr_i.  This is the footnote-3 per-gradient
+  modulation done right: momentum/adagrad state advances per event, fixing
+  the seed bug where per-gradient LRs silently bypassed the optimizer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+OPTIMIZERS = ("sgd", "momentum", "adagrad", "adamw")
+
+# optimizers whose update is expressible as one fused Pallas kernel pass
+# (adamw needs a scalar step counter — pytree backends only).
+KERNEL_OPTIMIZERS = ("sgd", "momentum", "adagrad")
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateSpec:
+    """Optimizer kind + hyperparameters.  Hashable → usable as a jit static."""
+
+    optimizer: str = "sgd"
+    momentum: float = 0.9
+    eps: float = 1e-8
+    beta1: float = 0.9
+    beta2: float = 0.95
+    weight_decay: float = 0.0
+
+    def __post_init__(self):
+        if self.optimizer not in OPTIMIZERS:
+            raise ValueError(f"unknown optimizer {self.optimizer!r}")
+
+    @property
+    def state_keys(self) -> Tuple[str, ...]:
+        return {"sgd": (), "momentum": ("velocity",), "adagrad": ("accum",),
+                "adamw": ("mu", "nu", "count")}[self.optimizer]
+
+    @property
+    def kernel_supported(self) -> bool:
+        return self.optimizer in KERNEL_OPTIMIZERS
+
+
+def spec_from_run(run) -> UpdateSpec:
+    """Build an UpdateSpec from a RunConfig (the repo-wide convention)."""
+    return UpdateSpec(optimizer=run.optimizer, momentum=run.momentum,
+                      weight_decay=run.weight_decay)
+
+
+def init_state(spec: UpdateSpec, params) -> dict:
+    """Optimizer state pytree.  Accumulators are fp32 regardless of the
+    parameter dtype (bf16 params train with fp32 velocity/variance)."""
+    f32 = lambda p: jnp.zeros(jnp.shape(p), jnp.float32)
+    if spec.optimizer == "momentum":
+        return {"velocity": jax.tree.map(f32, params)}
+    if spec.optimizer == "adagrad":
+        return {"accum": jax.tree.map(f32, params)}
+    if spec.optimizer == "adamw":
+        return {"mu": jax.tree.map(f32, params),
+                "nu": jax.tree.map(f32, params),
+                "count": jnp.zeros((), jnp.int32)}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# THE applyUpdate rule.  One optimizer event on fp32 arrays.
+# ---------------------------------------------------------------------------
+def update_event(spec: UpdateSpec, w, s, g, lr):
+    """θ' = θ − α·step(g) with the optimizer state folded in.
+
+    ``w``/``g`` are fp32 arrays of one leaf; ``s`` is that leaf's fp32 state
+    (velocity or adagrad accumulator; ignored for sgd).  ``lr`` may be a
+    traced scalar.  Returns ``(w', s')``.
+
+    Called per-leaf by the pytree backends and per-tile *inside* the Pallas
+    ``ps_update`` kernel — the kernel and the references share this body.
+    (adamw carries two moments + a counter and is handled in backends.py.)
+    """
+    if spec.optimizer == "sgd":
+        return w - lr * g, s
+    if spec.optimizer == "momentum":
+        v = spec.momentum * s + g
+        return w - lr * v, v
+    if spec.optimizer == "adagrad":
+        a = s + jnp.square(g)
+        return w - lr * g / (jnp.sqrt(a) + spec.eps), a
+    raise ValueError(f"update_event does not support {spec.optimizer!r}")
+
+
+# ---------------------------------------------------------------------------
+# Folding algebra: c sequential momentum events → one affine update.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RoundFold:
+    """One-shot equivalent of c sequential momentum events.
+
+    Sequential:  v_j = m·v_{j-1} + g_j ;  θ ← θ − lr_j·v_j   (j = 0..c−1)
+    folds exactly into
+
+        θ' = θ − Σ_i theta_coef_i·g_i − v0_coef·v
+        v' = v_decay·v + Σ_i m^{c−1−i}·g_i
+
+    ``v_gain`` = Σ_i m^{c−1−i} is the velocity gain when all g_i coincide
+    (the fused engine's single weighted-mean gradient); with distinct g_i the
+    velocity carry is a documented round-level approximation while the θ
+    update stays exact for round 1 (see EXPERIMENTS.md §Perf).
+    """
+
+    theta_coef: np.ndarray     # (c,) per-gradient θ coefficients
+    v0_coef: float             # θ's carry from the incoming velocity
+    v_decay: float             # m^c
+    v_gain: float              # Σ_i m^{c−1−i}
+
+
+def sequential_fold(lrs: Sequence[float], momentum: float) -> RoundFold:
+    """Fold per-event LRs + momentum into the affine round update."""
+    lrs = np.asarray(lrs, np.float64)
+    c = len(lrs)
+    m = float(momentum)
+    coef = np.zeros((c,))
+    for i in range(c):
+        for j in range(i, c):
+            coef[i] += lrs[j] * (m ** (j - i))
+    v0 = float(sum(lrs[j] * (m ** (j + 1)) for j in range(c)))
+    gain = float(sum(m ** (c - 1 - i) for i in range(c)))
+    return RoundFold(theta_coef=coef.astype(np.float64), v0_coef=v0,
+                     v_decay=m ** c, v_gain=gain)

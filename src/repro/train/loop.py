@@ -16,9 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, RunConfig
-from repro.core.distributed import init_opt_state, make_train_step
+from repro.core.distributed import make_train_step
 from repro.data.pipeline import PrefetchIterator, make_batch_fn
 from repro.models import init_model, model_loss
+from repro.optim import init_state, spec_from_run
 
 
 @dataclasses.dataclass
@@ -46,7 +47,7 @@ def train(cfg: ModelConfig, run: RunConfig, *, steps: int,
     key = jax.random.PRNGKey(run.seed)
     if params is None:
         params = init_model(cfg, key)
-    opt = init_opt_state(run, params)
+    opt = init_state(spec_from_run(run), params)
 
     def loss_fn(p, b, sample_weights=None):
         return model_loss(cfg, run, p, b, sample_weights=sample_weights)
