@@ -1,5 +1,5 @@
 """Shared benchmark plumbing: the small SGD problem used for accuracy-axis
-experiments (CIFAR-scale stand-in, see DESIGN.md §7) and CSV/JSON helpers."""
+experiments (CIFAR-scale stand-in, see DESIGN.md §8) and CSV/JSON helpers."""
 
 from __future__ import annotations
 
@@ -73,9 +73,11 @@ class MLPProblem:
         return self._grad(p, batch)
 
     def batch_fn_for(self, mu: int, seed: int = 0) -> Callable:
+        # returns host (numpy) arrays: the jitted grad_fn transfers them on
+        # call, and the replay engine stages the whole trace's batches with
+        # ONE device transfer per leaf instead of one per minibatch.
         def fn(learner: int, step: int):
-            x, y = self.task.minibatch(learner, step, mu, seed=seed)
-            return jnp.asarray(x), jnp.asarray(y)
+            return self.task.minibatch(learner, step, mu, seed=seed)
         return fn
 
     def test_error(self, p) -> float:

@@ -1,7 +1,9 @@
 """Paper Fig. 5: dividing the learning rate by ⟨σ⟩ = n (Eq. 6) rescues
 convergence for the n-softsync protocol; α₀ at n = λ diverges.
 
-Reproduced on the teacher-classification task with λ = 30 learners.
+Reproduced on the teacher-classification task with λ = 30 learners, on the
+compiled trace/replay engine (``core/engine.py``; oracle-equivalence with
+the legacy loop pinned by ``tests/test_trace_engine.py``).
 """
 
 from __future__ import annotations
@@ -10,7 +12,7 @@ import numpy as np
 
 from benchmarks.common import MLPProblem, emit, save_json, updates_for_epochs
 from repro.config import RunConfig
-from repro.core.simulator import simulate
+from repro.core.engine import simulate_compiled as simulate
 
 
 def run(epochs: int = 12, base_lr: float = 2.0) -> dict:

@@ -3,7 +3,7 @@
 #
 #   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,table2,...]
 #
-# Mapping (DESIGN.md section 7):
+# Mapping (DESIGN.md section 8):
 #   fig4   -> staleness_distribution   (<sigma> ~= n, sigma <= 2n)
 #   fig5   -> lr_modulation            (alpha0/n rescues convergence)
 #   fig6_7 -> tradeoff_curves          ((sigma, mu, lambda) error/time curves)
@@ -29,6 +29,7 @@ BENCHES = [
     ("table2", "benchmarks.mu_lambda"),
     ("table3_4", "benchmarks.summary"),
     ("kernels", "benchmarks.kernel_bench"),
+    ("sim_engine", "benchmarks.sim_engine_bench"),  # legacy loop vs compiled replay
     ("baselines", "benchmarks.baselines"),   # paper sec-6 related work + sec-3.3 accrual
     ("cnn", "benchmarks.cnn"),               # Fig-5 on the paper's own CNN (~9 min)
 ]
@@ -58,6 +59,8 @@ def main() -> None:
             kwargs = {"epochs": 3}
         if args.quick and bid == "fig4":
             kwargs = {"steps": 1000}
+        if args.quick and bid == "sim_engine":
+            kwargs = {"updates": 40}
         mod.run(**kwargs)
         print(f"_meta/{bid}/seconds,{time.time() - t0:.1f},")
         sys.stdout.flush()

@@ -1,0 +1,115 @@
+"""Legacy per-arrival loop vs compiled trace/replay engine (DESIGN.md §4).
+
+Measures PS-simulation throughput (weight updates/sec) on the MLP stand-in
+at λ ∈ {8, 32, 128}, μ = 4 (the paper's small-minibatch sweet spot,
+Table 3), for two protocol shapes:
+
+* ``1-softsync`` (c = λ) — the paper's Table-3 winner and the shape where
+  the legacy loop hurts most: λ un-jitted ``grad_fn`` dispatches plus one
+  host→device optimizer round-trip per update.
+* ``(λ/4)-softsync`` (c = 4) — staleness-heavy: the replay ring buffer K
+  grows to ~2n while per-update work stays fixed.
+* ``λ-softsync`` (c = 1, Eq.-5 degenerate ≈ async) — the paper's maximal-
+  staleness regime: the ring buffer runs at its full K ≈ 2λ bound and the
+  legacy loop pays one complete dispatch round-trip per single-gradient
+  update.
+
+The compiled engine executes the whole trace as a single ``lax.scan`` with
+the c gradients of an event vmapped and the apply fused over the flat
+model (``optim.apply_event_flat``).
+
+Timing protocol: per configuration, both engines are warmed (jit compiles
+and the engine's one-time ``lax.scan`` compile are excluded — matching the
+sweep regime: one compile, many scenario replays), then timed on identical
+RunConfig/seed (identical traces).  ``max_param_drift`` cross-checks the
+oracle equivalence on the benchmarked runs themselves.
+
+Results → ``benchmarks/results/sim_engine_bench.json``; also surfaced by
+``benchmarks/summary.py``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import MLPProblem, emit, save_json
+from repro.config import RunConfig
+from repro.core.engine import replay
+from repro.core.simulator import simulate
+from repro.core.trace import schedule
+
+LAMBDAS = (8, 32, 128)
+MU = 4
+
+
+def _bench_one(prob, cfg: RunConfig, updates: int, warm_updates: int = 4,
+               repeats: int = 5) -> dict:
+    kw = dict(grad_fn=prob.grad_fn, init_params=prob.init,
+              batch_fn=prob.batch_fn_for(MU))
+
+    def wait(res):
+        jnp.asarray(res.params["w1"]).block_until_ready()
+        return res
+
+    def best_of(fn):
+        # min over repeats: discards scheduler noise on a shared CPU
+        times, res = [], None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = wait(fn())
+            times.append(time.perf_counter() - t0)
+        return min(times), res
+
+    wait(simulate(cfg, steps=warm_updates, **kw))          # legacy warmup
+    t_legacy, legacy = best_of(lambda: simulate(cfg, steps=updates, **kw))
+
+    trace = schedule(cfg, updates)
+    t0 = time.perf_counter()
+    wait(replay(trace, cfg, **kw))                         # scan compile
+    t_compile = time.perf_counter() - t0
+    t_replay, compiled = best_of(lambda: replay(trace, cfg, **kw))
+
+    drift = float(jnp.max(jnp.abs(
+        jnp.asarray(legacy.params["w2"]) -
+        jnp.asarray(compiled.params["w2"]))))
+    return {
+        "lambda": cfg.n_learners,
+        "n_softsync": cfg.n_softsync,
+        "c": cfg.gradients_per_update,
+        "ring_buffer_K": trace.max_staleness + 1,
+        "updates": updates,
+        "legacy_updates_per_s": updates / t_legacy,
+        "compiled_updates_per_s": updates / t_replay,
+        "speedup": t_legacy / t_replay,
+        "compile_s": t_compile,
+        "max_param_drift": drift,
+    }
+
+
+def run(updates: int = 480) -> dict:
+    prob = MLPProblem()
+    out = {}
+    for lam in LAMBDAS:
+        for label, n in [("softsync_1", 1), ("softsync_quarter", lam // 4),
+                         ("softsync_lambda", lam)]:
+            cfg = RunConfig(protocol="softsync", n_softsync=n,
+                            n_learners=lam, minibatch=MU, base_lr=0.05,
+                            lr_policy="staleness_inverse",
+                            optimizer="momentum", seed=17)
+            row = _bench_one(prob, cfg, updates)
+            out[f"{label}_lambda_{lam}"] = row
+            emit(f"sim_engine/{label}/lambda={lam}/updates_per_s",
+                 f"legacy={row['legacy_updates_per_s']:.1f} "
+                 f"compiled={row['compiled_updates_per_s']:.1f}",
+                 f"speedup={row['speedup']:.1f}x c={row['c']} "
+                 f"K={row['ring_buffer_K']} "
+                 f"drift={row['max_param_drift']:.1e}")
+    save_json("sim_engine_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

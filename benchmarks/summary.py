@@ -2,14 +2,19 @@
 ImageNet-scale analog — the four deployment configurations base-hardsync /
 base-softsync / adv-softsync / adv*-softsync (Table 4), with error from the
 protocol-faithful simulator and time/epoch from the calibrated runtime model
-scaled to a 289 MB model.
+scaled to a 289 MB model.  Also surfaces the latest simulator-engine
+throughput numbers (``benchmarks/sim_engine_bench.py``) when present.
 """
 
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
 
-from benchmarks.common import MLPProblem, emit, save_json, updates_for_epochs
+from benchmarks.common import (RESULTS_DIR, MLPProblem, emit, save_json,
+                               updates_for_epochs)
 from repro.config import RunConfig
 from repro.core import tradeoff as to
 from repro.core.simulator import simulate
@@ -107,6 +112,17 @@ def run(epochs: int = 10) -> dict:
     err_star = t4[3]["test_error"]
     emit("table4/hardsync_best_error", err_hard <= err_star + 0.05,
          f"{err_hard:.3f} vs adv*:{err_star:.3f}")
+    # ---- simulator engine throughput (if sim_engine_bench has run) ---------
+    bench = os.path.join(RESULTS_DIR, "sim_engine_bench.json")
+    if os.path.exists(bench):
+        with open(bench) as f:
+            rows = json.load(f)
+        out["sim_engine"] = rows
+        for key, r in sorted(rows.items()):
+            emit(f"summary/sim_engine/{key}",
+                 f"{r['compiled_updates_per_s']:.0f}up/s",
+                 f"legacy={r['legacy_updates_per_s']:.0f} "
+                 f"speedup={r['speedup']:.1f}x")
     save_json("table3_4_summary", out)
     return out
 

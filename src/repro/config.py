@@ -44,6 +44,10 @@ VALID_BLOCKS = {
 
 FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
 
+# per-minibatch compute-duration models for the simulator's schedule pass
+# (core/trace.make_duration_sampler dispatches on these)
+DURATION_MODELS = ("homogeneous", "two_speed", "pareto")
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -272,6 +276,17 @@ class RunConfig:
     weight_decay: float = 0.0
     warmstart_epochs: int = 0             # paper §5.5 hardsync warm start
     seed: int = 0
+    # --- simulated cluster heterogeneity (trace schedule pass) --------------
+    # Per-minibatch compute-duration model used by the event-queue schedule
+    # (core/trace.py).  "homogeneous" is the paper's cluster (lognormal
+    # jitter); "two_speed" splits learners into a slow and a fast tier;
+    # "pareto" adds a heavy straggler tail (Dutta et al., "Slow and Stale
+    # Gradients Can Win the Race").
+    duration_model: str = "homogeneous"   # | "two_speed" | "pareto"
+    slow_fraction: float = 0.25           # two_speed: fraction of slow learners
+    slow_factor: float = 4.0              # two_speed: slowdown multiplier
+    pareto_alpha: float = 2.5             # pareto: tail index (smaller=heavier)
+    pareto_scale: float = 0.5             # pareto: straggler magnitude
     # --- distributed runtime ------------------------------------------------
     num_microbatches: int = 1
     remat: bool = True
@@ -297,6 +312,8 @@ class RunConfig:
         if self.lr_policy not in ("const", "staleness_inverse", "sqrt_scale",
                                   "per_gradient"):
             raise ValueError(f"unknown lr_policy {self.lr_policy!r}")
+        if self.duration_model not in DURATION_MODELS:
+            raise ValueError(f"unknown duration_model {self.duration_model!r}")
 
     @property
     def gradients_per_update(self) -> int:
@@ -331,7 +348,7 @@ class RunConfig:
 def validate_pairing(model: ModelConfig, shape: InputShape) -> Optional[str]:
     """Return a skip-reason string if (model, shape) must be skipped, else None.
 
-    Skips mirror DESIGN.md §4: encoder-only models have no decode step;
+    Skips mirror DESIGN.md §5: encoder-only models have no decode step;
     full-attention models need a sliding-window variant for long_500k (all of
     ours implement it, so only encoder-only skips remain).
     """

@@ -2,18 +2,24 @@
 training (clocks, protocols, LR modulation, event simulator, and the
 TPU-native distributed engines)."""
 from repro.core.clock import StalenessRecord, VectorClockLog
-from repro.core.protocols import ParameterServerState, tree_mean
-from repro.core.lr_policies import make_lr_policy, hardsync_lr, softsync_lr
+from repro.core.protocols import (ParameterServerState, init_ps_state,
+                                  tree_mean)
+from repro.core.lr_policies import (make_lr_policy, hardsync_lr, softsync_lr,
+                                    resolve_trace_lrs)
+from repro.core.trace import (ArrivalTrace, make_duration_sampler, schedule)
 from repro.core.simulator import simulate, simulate_measure, SimResult
+from repro.core.engine import replay, simulate_compiled
 from repro.core.distributed import (make_train_step, make_hardsync_step,
                                     make_softsync_step, init_opt_state,
                                     round_event_lrs, fused_coefficients)
 
 __all__ = [
     "StalenessRecord", "VectorClockLog", "ParameterServerState",
-    "tree_mean",
-    "make_lr_policy", "hardsync_lr", "softsync_lr",
+    "init_ps_state", "tree_mean",
+    "make_lr_policy", "hardsync_lr", "softsync_lr", "resolve_trace_lrs",
+    "ArrivalTrace", "make_duration_sampler", "schedule",
     "simulate", "simulate_measure", "SimResult",
+    "replay", "simulate_compiled",
     "make_train_step", "make_hardsync_step", "make_softsync_step",
     "init_opt_state", "round_event_lrs", "fused_coefficients",
 ]

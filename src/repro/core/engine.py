@@ -1,0 +1,221 @@
+"""Replay pass of the compiled PS simulator (DESIGN.md §4).
+
+Phase 2 of the trace/replay split: given the :class:`ArrivalTrace` a
+schedule pass produced (``core/trace.py``), execute every update event in
+ONE compiled ``jax.lax.scan`` instead of the legacy per-arrival Python loop
+(one un-jitted ``grad_fn`` dispatch and one host→device optimizer
+round-trip per gradient).
+
+The staleness semantics — each gradient is computed against exactly the
+weights its learner pulled — are preserved with a **device-resident weight
+ring buffer**: a (K, D) fp32 buffer of the last K parameter snapshots in
+the ``optim.flatten`` layout, where ``K = trace.max_staleness + 1`` (the
+trace knows its own bound; n-softsync keeps it at ~2n, Fig. 4).  Snapshot
+of timestamp ``ts`` lives in row ``ts % K``; event j gathers its c source
+rows, unflattens them, computes the c gradients with a vmapped ``grad_fn``,
+and applies ONE fused multi-gradient event through the unified subsystem —
+``repro.optim.apply_event_flat`` on the flat buffers (the jnp twin of the
+Pallas ``ps_update`` tile; pytree ``apply_update_tree`` for adamw), in
+``combine`` or ``sequential`` mode per the trace's LR policy — before
+writing the new snapshot to row ``(j+1) % K``.  The row being overwritten
+belongs to timestamp j+1−K, which no later event can reference — σ would
+exceed the trace's own max.  The ring keeps fp32 master weights; the final
+parameters are cast back to their original dtypes on exit.
+
+Oracle: the legacy loop in ``core/simulator.py``; equivalence on identical
+traces is pinned by ``tests/test_trace_engine.py`` (EXPERIMENTS.md §Sim).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.config import RunConfig
+from repro.core.lr_policies import resolve_trace_lrs
+from repro.core.protocols import init_ps_state
+from repro.core.simulator import SimResult
+from repro.core.trace import ArrivalTrace, schedule
+from repro.optim import flatten
+
+
+@functools.lru_cache(maxsize=32)
+def _unflatten_jit(layout: flatten.TreeLayout) -> Callable:
+    """Jitted (D,) → pytree restore (eager slice-per-leaf costs ~ms/call)."""
+    return jax.jit(lambda flat: flatten.flat_to_tree(flat, layout))
+
+
+def _unstack_tree(tree, c: int):
+    """Tree with a leading (c,) axis → list of c pytrees (c is static)."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(c)]
+
+
+@functools.lru_cache(maxsize=32)
+def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
+                  layout: flatten.TreeLayout):
+    """The jitted scan over update events — cached per static config so
+    repeated replays (benchmark/sweep loops) reuse the compiled program;
+    the LRU bound keeps long-lived processes from pinning every grad_fn
+    closure + executable ever seen.
+
+    Kernel-supported optimizers (sgd / momentum / adagrad) never leave the
+    flat domain: the carry is just the (K, D) ring plus the (D,) state
+    vector, gradients are flattened once per event, and the apply is ONE
+    fused ``optim.apply_event_flat`` over the whole model — the scan body
+    is the jnp twin of the Pallas ``ps_update`` tile.  adamw (scalar step
+    counter, no kernel path) falls back to the pytree apply.
+    """
+    coef = jnp.full((c,), 1.0 / c, jnp.float32)
+
+    def gradients(ring, x):
+        rows = ring[x["ts"]]          # (c, D) gather; ts pre-wrapped mod K
+        pulled = flatten.batched_flat_to_tree(rows, layout)
+        return jax.vmap(grad_fn)(pulled, x["batch"])
+
+    if spec.kernel_supported:
+        def event(carry, x):
+            ring, s = carry
+            g = flatten.batched_tree_to_flat(gradients(ring, x))
+            w, s = optim.apply_event_flat(spec, ring[x["prev"]], s, g,
+                                          coef, x["lrs"], mode)
+            return (ring.at[x["slot"]].set(w), s), None
+    else:
+        def event(carry, x):
+            ring, (params, opt_state) = carry
+            grads = _unstack_tree(gradients(ring, x), c)
+            params, opt_state = optim.apply_update_tree(
+                spec, params, opt_state, grads, coef, x["lrs"], mode)
+            ring = ring.at[x["slot"]].set(flatten.tree_to_flat(params))
+            return (ring, (params, opt_state)), None
+
+    @jax.jit
+    def run(carry, xs):
+        # unroll a few events per while-loop iteration: the body is tiny
+        # (one fused event), so loop bookkeeping is a measurable fraction
+        return jax.lax.scan(event, carry, xs, unroll=8)[0]
+
+    return run
+
+
+def _materialize_batches(trace: ArrivalTrace, batch_fn: Callable):
+    """Evaluate ``batch_fn(learner, minibatch_idx)`` for every trace slot
+    and stack into a pytree with leading (steps, c) axes.  Stacking happens
+    host-side so the whole trace's data moves to device in ONE transfer per
+    leaf (batch_fns returning numpy avoid per-minibatch device_puts)."""
+    rows = []
+    for j in range(trace.steps):
+        slots = [batch_fn(int(trace.learner[j, i]), int(trace.mb_index[j, i]))
+                 for i in range(trace.c)]
+        rows.append(jax.tree.map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]), *slots))
+    return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *rows)
+
+
+def replay(trace: ArrivalTrace, run: RunConfig, *,
+           grad_fn: Callable,
+           init_params,
+           batch_fn: Callable,
+           eval_fn: Optional[Callable] = None,
+           eval_every: int = 0) -> SimResult:
+    """Execute a scheduled trace against real gradients, compiled.
+
+    ``grad_fn(params, batch) -> grads`` must be vmappable (any jit-able JAX
+    function is).  ``batch_fn(learner_idx, minibatch_idx) -> batch`` is
+    evaluated host-side for every trace slot up front — the trace fixes the
+    (learner, minibatch) schedule, so the data rides along as scan inputs.
+
+    With ``eval_every`` set, the scan runs in eval_every-sized segments;
+    a trailing remainder segment (steps % eval_every != 0) has a different
+    scan length and compiles a second program — pick eval_every | steps in
+    compile-sensitive sweeps.
+    """
+    if (trace.protocol != run.protocol
+            or trace.n_learners != run.n_learners
+            or trace.c != run.gradients_per_update):
+        raise ValueError(
+            f"trace ({trace.protocol}, λ={trace.n_learners}, c={trace.c}) "
+            f"was not scheduled from this RunConfig ({run.protocol}, "
+            f"λ={run.n_learners}, c={run.gradients_per_update})")
+    # the trace bakes policy-resolved LRs in; re-resolving from this run's
+    # policy must reproduce them, or the caller is silently sweeping
+    # base_lr/lr_policy on a stale trace
+    want_lrs, want_mode = resolve_trace_lrs(run, trace.pulled_ts)
+    if trace.mode != want_mode or not np.allclose(trace.lrs, want_lrs):
+        raise ValueError(
+            f"trace LRs/mode ({trace.mode}) disagree with this RunConfig's "
+            f"lr_policy={run.lr_policy!r}/base_lr={run.base_lr} — reschedule "
+            f"the trace for this config")
+    steps, c = trace.steps, trace.c
+    K = trace.max_staleness + 1
+    spec, opt_state = init_ps_state(run, init_params)
+    layout = flatten.layout_of(init_params)
+
+    scan_fn = _make_scan_fn(grad_fn, spec, trace.mode, c, K, layout)
+
+    steps_idx = np.arange(steps)
+    xs = {
+        "ts": jnp.asarray(trace.pulled_ts % K, jnp.int32),
+        "prev": jnp.asarray(steps_idx % K, jnp.int32),
+        "slot": jnp.asarray((steps_idx + 1) % K, jnp.int32),
+        "lrs": jnp.asarray(trace.lrs, jnp.float32),
+        "batch": _materialize_batches(trace, batch_fn),
+    }
+    flat0 = flatten.tree_to_flat(init_params)
+    ring = jnp.broadcast_to(flat0, (K, flat0.shape[0]))
+    if spec.kernel_supported:
+        # flat-domain carry: ring + the single (D,) state vector (or None)
+        s0 = (flatten.tree_to_flat(opt_state[spec.state_keys[0]])
+              if spec.state_keys else None)
+        carry = (ring, s0)
+
+        def params_of(carry, done):
+            return _unflatten_jit(layout)(carry[0][done % K])
+    else:
+        carry = (ring, (init_params, opt_state))
+
+        def params_of(carry, done):
+            return carry[1][0]
+
+    history = []
+    if eval_fn and eval_every:
+        done = 0
+        while done < steps:
+            take = min(eval_every, steps - done)
+            seg = jax.tree.map(lambda a: a[done:done + take], xs)
+            carry = scan_fn(carry, seg)
+            done += take
+            if done % eval_every == 0:
+                history.append({"update": done,
+                                "time": float(trace.event_time[done - 1]),
+                                **eval_fn(params_of(carry, done))})
+    else:
+        carry = scan_fn(carry, xs)
+
+    params = params_of(carry, steps)
+    return SimResult(trace.clock_log(), steps, trace.simulated_time,
+                     trace.minibatches, params, history)
+
+
+def simulate_compiled(run: RunConfig, *,
+                      steps: int,
+                      grad_fn: Optional[Callable] = None,
+                      init_params=None,
+                      batch_fn: Optional[Callable] = None,
+                      eval_fn: Optional[Callable] = None,
+                      eval_every: int = 0,
+                      duration_sampler: Optional[Callable] = None
+                      ) -> SimResult:
+    """Drop-in counterpart of ``core.simulator.simulate`` on the compiled
+    trace/replay path: schedule once, then replay (or, with ``grad_fn``
+    left None, return the measure-mode result straight off the trace)."""
+    trace = schedule(run, steps, duration_sampler=duration_sampler)
+    if grad_fn is None:
+        return SimResult(trace.clock_log(), trace.steps,
+                         trace.simulated_time, trace.minibatches)
+    return replay(trace, run, grad_fn=grad_fn, init_params=init_params,
+                  batch_fn=batch_fn, eval_fn=eval_fn, eval_every=eval_every)

@@ -33,6 +33,13 @@ def tree_mean(grads: Sequence) -> object:
     return jax.tree.map(lambda *g: sum(g) / n, *grads)
 
 
+def init_ps_state(run, params):
+    """PS-side optimizer init shared by the host PS and the replay engine:
+    the run's UpdateSpec plus fresh fp32 optimizer state for ``params``."""
+    spec = optim.spec_from_run(run)
+    return spec, optim.init_state(spec, params)
+
+
 class ParameterServerState:
     """Host-side PS used by the event-driven simulator (Rudra-base logic).
 
@@ -52,17 +59,28 @@ class ParameterServerState:
 
     def __init__(self, params, c: int, optimizer: str = "sgd",
                  momentum: float = 0.9, weight_decay: float = 0.0,
-                 backend: str = "pallas"):
+                 backend: str = "pallas",
+                 spec: "optim.UpdateSpec" = None):
         self.params = params
         self.timestamp = 0
         self.c = c
-        self.optimizer = optimizer
-        self.momentum = momentum
         self.backend = backend
-        self.spec = optim.UpdateSpec(optimizer=optimizer, momentum=momentum,
-                                     weight_decay=weight_decay)
+        self.spec = spec if spec is not None else optim.UpdateSpec(
+            optimizer=optimizer, momentum=momentum,
+            weight_decay=weight_decay)
+        self.optimizer = self.spec.optimizer
+        self.momentum = self.spec.momentum
         self.opt_state = optim.init_state(self.spec, params)
         self._pending: List = []            # (grad, grad_timestamp)
+
+    @classmethod
+    def from_run(cls, params, run, backend: str = "pallas"
+                 ) -> "ParameterServerState":
+        """Build the host PS for a RunConfig — the spec comes from the same
+        ``spec_from_run`` mapping the compiled replay engine uses
+        (:func:`init_ps_state`), so the two stay field-for-field aligned."""
+        return cls(params, run.gradients_per_update, backend=backend,
+                   spec=optim.spec_from_run(run))
 
     @property
     def velocity(self):

@@ -1,4 +1,4 @@
-"""Event-driven parameter-server simulator — the faithful Rudra reproduction.
+"""Event-driven parameter-server simulator — the per-arrival oracle.
 
 The paper's asynchronous protocols are races between MPI processes; their
 *measurable* behaviour (staleness distributions, convergence, runtime) is a
@@ -11,15 +11,23 @@ or at a barrier (hardsync).  Timestamps/vector clocks follow §3.1 exactly.
 Two modes:
 
 * **measure** — gradients are tokens; only clocks are tracked.  Reproduces
-  Fig. 4 (⟨σ⟩ ≈ n, σ ≤ 2n w.h.p.) for any (λ, n) in milliseconds.
+  Fig. 4 (⟨σ⟩ ≈ n, σ ≤ 2n w.h.p.) for any (λ, n) in milliseconds.  This is
+  exactly the schedule pass of the compiled engine (``core/trace.py``).
 * **sgd** — each learner holds the weight copy it pulled and computes a real
   JAX gradient on its own mini-batch against *those* weights; the PS applies
   Eqs. 3–5 with the configured LR policy.  Reproduces Fig. 5 / Tables 2–3
   dynamics on synthetic tasks.
 
+The sgd mode here is the **legacy per-arrival loop**: one ``grad_fn`` call
+and one optimizer dispatch per gradient, on the host.  It is kept as the
+oracle the compiled trace/replay engine (``core/engine.py``, DESIGN.md §4)
+is equivalence-tested against; production sweeps should use
+``engine.simulate_compiled``.
+
 The simulated clock also yields the paper's runtime axis: total train time =
 simulated time of the last update, with per-minibatch durations from the
-calibrated cost model in ``core/tradeoff.py``.
+pluggable samplers in ``core/trace.py`` (``RunConfig.duration_model``) or
+the calibrated cost model in ``core/tradeoff.py``.
 """
 
 from __future__ import annotations
@@ -34,6 +42,7 @@ from repro.config import RunConfig
 from repro.core.clock import VectorClockLog
 from repro.core.lr_policies import make_lr_policy
 from repro.core.protocols import ParameterServerState
+from repro.core import trace as trace_mod
 
 
 @dataclasses.dataclass
@@ -55,12 +64,8 @@ class SimResult:
 
 
 def _default_duration_sampler(rng: np.random.Generator, mu: int):
-    """Per-minibatch compute time: fixed overhead + per-sample cost, with the
-    GEMM-efficiency penalty for small μ the paper describes (§5.2), plus
-    lognormal jitter (homogeneous-cluster noise)."""
-    gemm_eff = mu / (mu + 8.0)             # small μ ⇒ poor GEMM throughput
-    base = 0.5 + mu * 0.01 / gemm_eff
-    return base * rng.lognormal(mean=0.0, sigma=0.05)
+    """Legacy (rng, mu) alias of the homogeneous sampler in ``core/trace``."""
+    return trace_mod.base_duration(rng, mu)
 
 
 def simulate(run: RunConfig,
@@ -71,27 +76,30 @@ def simulate(run: RunConfig,
              batch_fn: Optional[Callable] = None,
              eval_fn: Optional[Callable] = None,
              eval_every: int = 0,
-             duration_sampler: Callable = _default_duration_sampler,
+             duration_sampler: Optional[Callable] = None,
+             ps_backend: str = "pallas",
              ) -> SimResult:
     """Run the PS simulation for ``steps`` weight updates.
 
     measure mode: leave ``grad_fn`` None.
     sgd mode: provide ``grad_fn(params, batch) -> grads``,
     ``init_params``, and ``batch_fn(learner_idx, minibatch_idx) -> batch``.
+    ``duration_sampler`` defaults to the model selected by
+    ``run.duration_model``; 2-arg ``(rng, mu)`` callables are accepted.
+    ``ps_backend`` picks the ``repro.optim`` backend of the host PS.
     """
-    lam = run.n_learners
-    rng = np.random.default_rng(run.seed)
-    lr_policy = make_lr_policy(run)
-    log = VectorClockLog()
-
     if grad_fn is None:                       # measure mode
         return simulate_measure(run, steps=steps,
                                 duration_sampler=duration_sampler)
+
+    lam = run.n_learners
+    rng = np.random.default_rng(run.seed)
+    sampler = trace_mod.as_learner_sampler(
+        duration_sampler or trace_mod.make_duration_sampler(run))
+    lr_policy = make_lr_policy(run)
+    log = VectorClockLog()
     # everything below is sgd mode: real gradients through the unified PS
-    ps = ParameterServerState(init_params, run.gradients_per_update,
-                              optimizer=run.optimizer,
-                              momentum=run.momentum,
-                              weight_decay=run.weight_decay)
+    ps = ParameterServerState.from_run(init_params, run, backend=ps_backend)
 
     # ---------------- hardsync: barrier rounds -----------------------------
     if run.protocol == "hardsync":
@@ -101,8 +109,7 @@ def simulate(run: RunConfig,
         history = []
         mb = 0
         for step in range(steps):
-            durations = [duration_sampler(rng, run.minibatch)
-                         for _ in range(lam)]
+            durations = [sampler(rng, run.minibatch, l) for l in range(lam)]
             t += max(durations)                       # barrier
             params0 = ps.params
             for l in range(lam):
@@ -122,13 +129,12 @@ def simulate(run: RunConfig,
     # event heap: (push_completion_time, tiebreak, learner_idx)
     heap = []
     for l in learners:
-        heapq.heappush(heap, (duration_sampler(rng, run.minibatch),
+        heapq.heappush(heap, (sampler(rng, run.minibatch, l.index),
                               l.index, l.index))
     updates = 0
     mb = 0
     t = 0.0
     history = []
-    c = run.gradients_per_update
 
     while updates < steps:
         t, _, li = heapq.heappop(heap)
@@ -151,46 +157,16 @@ def simulate(run: RunConfig,
         learner.params = ps.params
         learner.pulled_timestamp = ps.timestamp
         heapq.heappush(
-            heap, (t + duration_sampler(rng, run.minibatch), mb + lam, li))
+            heap, (t + sampler(rng, run.minibatch, li), mb + lam, li))
 
     return SimResult(log, updates, t, mb, ps.params, history)
 
 
 def simulate_measure(run: RunConfig, *, steps: int,
-                     duration_sampler: Callable = _default_duration_sampler
+                     duration_sampler: Optional[Callable] = None
                      ) -> SimResult:
-    """Staleness-only simulation (no gradients) — fast path for Fig. 4."""
-    lam = run.n_learners
-    c = run.gradients_per_update
-    rng = np.random.default_rng(run.seed)
-    log = VectorClockLog()
-
-    if run.protocol == "hardsync":
-        t = 0.0
-        for step in range(steps):
-            t += max(duration_sampler(rng, run.minibatch) for _ in range(lam))
-            log.record(step + 1, [step] * lam)
-        return SimResult(log, steps, t, steps * lam)
-
-    pulled_ts = [0] * lam
-    heap = []
-    for i in range(lam):
-        heapq.heappush(heap, (duration_sampler(rng, run.minibatch), i, i))
-    timestamp = 0
-    pending: List[int] = []
-    updates = 0
-    mb = 0
-    t = 0.0
-    while updates < steps:
-        t, _, li = heapq.heappop(heap)
-        mb += 1
-        pending.append(pulled_ts[li])
-        if len(pending) >= c:
-            timestamp += 1
-            updates += 1
-            log.record(timestamp, pending)
-            pending = []
-        pulled_ts[li] = timestamp
-        heapq.heappush(
-            heap, (t + duration_sampler(rng, run.minibatch), mb + lam, li))
-    return SimResult(log, updates, t, mb)
+    """Staleness-only simulation (no gradients) — fast path for Fig. 4.
+    Thin wrapper over the schedule pass: the trace IS the measurement."""
+    tr = trace_mod.schedule(run, steps, duration_sampler=duration_sampler)
+    return SimResult(tr.clock_log(), tr.steps, tr.simulated_time,
+                     tr.minibatches)

@@ -1,0 +1,214 @@
+"""Schedule pass of the compiled PS simulator (DESIGN.md §4).
+
+The event-driven simulation splits into two phases.  This module is phase 1:
+a host-side numpy **schedule** pass that runs the gradient-free event queue
+(the same priority-queue arrival semantics as the legacy per-arrival loop in
+``core/simulator.py``) and emits an :class:`ArrivalTrace` — for every update
+event, which learner filled each of its c gradient slots, the PS timestamp
+of the weights that learner had pulled, the learner's minibatch counter, the
+simulated clock, and the LRs resolved from the run's policy.  Phase 2
+(``core/engine.py``) replays the trace as one compiled ``lax.scan``.
+
+The schedule draws from ``np.random.default_rng(run.seed)`` in exactly the
+order the legacy loop does, so a trace scheduled with the same seed
+reproduces the legacy arrival order bit-for-bit (the oracle-equivalence
+contract, ``tests/test_trace_engine.py``).
+
+Duration samplers are pluggable ``(rng, mu, learner) -> seconds`` callables;
+:func:`make_duration_sampler` builds the one selected by
+``RunConfig.duration_model``:
+
+* ``homogeneous`` — fixed overhead + per-sample cost with the GEMM-
+  efficiency penalty for small μ (§5.2) and lognormal jitter.
+* ``two_speed``   — a two-tier heterogeneous cluster: the first
+  ``slow_fraction·λ`` learners run ``slow_factor×`` slower.
+* ``pareto``      — heavy straggler tail (Dutta et al., *Slow and Stale
+  Gradients Can Win the Race*): duration × (1 + scale·Pareto(α)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import inspect
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.config import DURATION_MODELS, RunConfig
+from repro.core.clock import VectorClockLog, staleness_matrix
+from repro.core.lr_policies import resolve_trace_lrs
+
+
+# ---------------------------------------------------------------------------
+# duration samplers
+# ---------------------------------------------------------------------------
+def base_duration(rng: np.random.Generator, mu: int) -> float:
+    """Per-minibatch compute time: fixed overhead + per-sample cost, with the
+    GEMM-efficiency penalty for small μ the paper describes (§5.2), plus
+    lognormal jitter (homogeneous-cluster noise)."""
+    gemm_eff = mu / (mu + 8.0)             # small μ ⇒ poor GEMM throughput
+    base = 0.5 + mu * 0.01 / gemm_eff
+    return base * rng.lognormal(mean=0.0, sigma=0.05)
+
+
+def make_duration_sampler(run: RunConfig) -> Callable:
+    """The ``(rng, mu, learner) -> seconds`` sampler selected by
+    ``run.duration_model``."""
+    if run.duration_model == "homogeneous":
+        def sampler(rng, mu, learner):
+            return base_duration(rng, mu)
+        return sampler
+    if run.duration_model == "two_speed":
+        # slow_fraction small enough to round to zero learners is a valid
+        # homogeneous control — don't force a slow learner into it
+        n_slow = int(round(run.slow_fraction * run.n_learners))
+        factor = float(run.slow_factor)
+
+        def sampler(rng, mu, learner):
+            d = base_duration(rng, mu)
+            return d * factor if learner < n_slow else d
+        return sampler
+    if run.duration_model == "pareto":
+        alpha, scale = float(run.pareto_alpha), float(run.pareto_scale)
+
+        def sampler(rng, mu, learner):
+            return base_duration(rng, mu) * (1.0 + scale * rng.pareto(alpha))
+        return sampler
+    raise ValueError(f"duration_model must be one of {DURATION_MODELS}, "
+                     f"got {run.duration_model!r}")
+
+
+def as_learner_sampler(sampler: Callable) -> Callable:
+    """Adapt a legacy ``(rng, mu)`` sampler to the ``(rng, mu, learner)``
+    signature (learner-independent)."""
+    try:
+        n_args = len(inspect.signature(sampler).parameters)
+    except (TypeError, ValueError):
+        n_args = 3
+    if n_args >= 3:
+        return sampler
+    return lambda rng, mu, learner: sampler(rng, mu)
+
+
+# ---------------------------------------------------------------------------
+# the trace
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ArrivalTrace:
+    """Everything the replay engine needs, as dense host arrays.
+
+    Row j describes update event j (PS timestamp j → j+1): slot i of the row
+    is the i-th gradient folded into that update, in arrival order.
+    """
+
+    protocol: str
+    n_learners: int
+    learner: np.ndarray       # (steps, c) int32 — learner that pushed slot i
+    pulled_ts: np.ndarray     # (steps, c) int32 — timestamp of pulled weights
+    mb_index: np.ndarray      # (steps, c) int32 — learner's minibatch counter
+    event_time: np.ndarray    # (steps,) float64 — simulated clock at fire
+    lrs: np.ndarray           # (steps, c) — policy-resolved LRs
+    mode: str                 # "combine" | "sequential" (repro.optim modes)
+
+    @property
+    def steps(self) -> int:
+        return int(self.pulled_ts.shape[0])
+
+    @property
+    def c(self) -> int:
+        """Gradients per update (Eq. 5's c; λ for hardsync)."""
+        return int(self.pulled_ts.shape[1])
+
+    @property
+    def minibatches(self) -> int:
+        """Arrivals consumed by the trace (the PS fires every c-th one)."""
+        return self.steps * self.c
+
+    @property
+    def staleness(self) -> np.ndarray:
+        """(steps, c) σ matrix: gradient in slot (j, i) has σ = j − ts
+        (Eq.-2 accounting, one home: ``clock.staleness_matrix``)."""
+        return staleness_matrix(self.pulled_ts)
+
+    @property
+    def max_staleness(self) -> int:
+        """Ring-buffer bound: the replay engine keeps max σ + 1 snapshots
+        (n-softsync bounds this at ~2n w.h.p., Fig. 4)."""
+        return int(self.staleness.max()) if self.steps else 0
+
+    @property
+    def simulated_time(self) -> float:
+        """The paper's runtime axis: simulated clock of the last update."""
+        return float(self.event_time[-1]) if self.steps else 0.0
+
+    def clock_log(self) -> VectorClockLog:
+        """Fig.-4 statistics, trace-native (vectorized over the σ matrix)."""
+        return VectorClockLog.from_matrix(self.pulled_ts)
+
+
+# ---------------------------------------------------------------------------
+# the schedule pass
+# ---------------------------------------------------------------------------
+def schedule(run: RunConfig, steps: int,
+             duration_sampler: Optional[Callable] = None) -> ArrivalTrace:
+    """Run the gradient-free event queue for ``steps`` updates.
+
+    Identical arrival semantics (and rng draw order) to the legacy
+    per-arrival loop; the only output is the trace.
+    """
+    lam = run.n_learners
+    rng = np.random.default_rng(run.seed)
+    sampler = as_learner_sampler(duration_sampler or
+                                 make_duration_sampler(run))
+    mu = run.minibatch
+
+    if run.protocol == "hardsync":
+        # barrier rounds: every learner contributes its step-th minibatch
+        # computed on the round-start weights (timestamp = step).
+        times = np.zeros((steps,))
+        t = 0.0
+        for step in range(steps):
+            t += max(sampler(rng, mu, l) for l in range(lam))
+            times[step] = t
+        rows = np.arange(steps, dtype=np.int32)[:, None]
+        learner = np.broadcast_to(np.arange(lam, dtype=np.int32),
+                                  (steps, lam)).copy()
+        pulled = np.broadcast_to(rows, (steps, lam)).copy()
+        mb_idx = pulled.copy()
+        lrs, mode = resolve_trace_lrs(run, pulled)
+        return ArrivalTrace(run.protocol, lam, learner, pulled, mb_idx,
+                            times, lrs, mode)
+
+    # ------------- softsync / async: the priority queue ---------------------
+    c = run.gradients_per_update
+    heap = []
+    for i in range(lam):
+        heapq.heappush(heap, (sampler(rng, mu, i), i, i))
+    pulled_ts = [0] * lam
+    mb_done = [0] * lam
+    learner = np.zeros((steps, c), np.int32)
+    pulled = np.zeros((steps, c), np.int32)
+    mb_idx = np.zeros((steps, c), np.int32)
+    times = np.zeros((steps,))
+    timestamp = 0
+    slot = 0
+    mb = 0
+    while timestamp < steps:
+        t, _, li = heapq.heappop(heap)
+        mb += 1
+        learner[timestamp, slot] = li
+        pulled[timestamp, slot] = pulled_ts[li]
+        mb_idx[timestamp, slot] = mb_done[li]
+        mb_done[li] += 1
+        slot += 1
+        if slot == c:                          # the PS fires
+            times[timestamp] = t
+            timestamp += 1
+            slot = 0
+        # pullWeights: pick up the current timestamp
+        pulled_ts[li] = timestamp
+        heapq.heappush(heap, (t + sampler(rng, mu, li), mb + lam, li))
+    lrs, mode = resolve_trace_lrs(run, pulled)
+    return ArrivalTrace(run.protocol, lam, learner, pulled, mb_idx,
+                        times, lrs, mode)

@@ -140,6 +140,30 @@ def calibrate_to_baseline(target_seconds: float = 22_392.0,
                                t_sample=hw.t_sample * scale)
 
 
+def minibatch_duration_sampler(arch: str, lam: int,
+                               hw: HardwareModel = None,
+                               wl: WorkloadModel = None,
+                               jitter_sigma: float = 0.05):
+    """Duration sampler whose base is the calibrated per-minibatch cost
+    (compute + exposed communication for ``arch``), pluggable into the
+    schedule pass (``core/trace.py``): the trace's ``event_time`` then IS
+    the paper's runtime axis, read directly off the simulation instead of a
+    separate closed-form epoch model."""
+    hw = hw or calibrate_to_baseline()
+    wl = wl or WorkloadModel()
+
+    def sampler(rng, mu, learner):
+        return (minibatch_time(arch, mu, lam, hw, wl)
+                * rng.lognormal(mean=0.0, sigma=jitter_sigma))
+    return sampler
+
+
+def runtime_axis(trace) -> np.ndarray:
+    """Per-update wall-clock (simulated seconds) for error-vs-time curves:
+    the trace's event clock, shaped (steps,)."""
+    return np.asarray(trace.event_time, dtype=np.float64)
+
+
 def speedup_table(arch: str, protocol: str, mu: int,
                   lams=(1, 2, 4, 10, 18, 30),
                   hw: HardwareModel = None) -> Dict[int, float]:

@@ -49,10 +49,20 @@ class TeacherClassification:
 
     def minibatch(self, learner: int, step: int, mu: int,
                   seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
-        """getMinibatch: random sampling, deterministic per (learner, step)."""
-        rng = np.random.default_rng(
-            (seed * 1_000_003 + learner) * 1_000_003 + step)
-        idx = rng.integers(0, self.n_train, size=mu)
+        """getMinibatch: random sampling, deterministic per (learner, step).
+
+        Indices come from a vectorized splitmix64 hash of the (seed,
+        learner, step, slot) counter instead of a freshly constructed
+        Generator — this is the simulators' per-arrival hot path (a
+        ``default_rng`` construction costs ~80 μs, the hash ~2 μs)."""
+        base = np.uint64(((seed * 1_000_003 + learner) * 1_000_003 + step)
+                         & 0xFFFFFFFFFFFFFFFF)
+        z = base + (np.arange(1, mu + 1, dtype=np.uint64)
+                    * np.uint64(0x9E3779B97F4A7C15))
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+        idx = (z % np.uint64(self.n_train)).astype(np.int64)
         return self.x_train[idx], self.y_train[idx]
 
     @property

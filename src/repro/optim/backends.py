@@ -128,6 +128,29 @@ def apply_round_folded(spec: UpdateSpec, params, state, ghat,
     return new_p, {"velocity": new_v}
 
 
+def apply_event_flat(spec: UpdateSpec, w, s, g, coef, lrs,
+                     mode: str = "combine"):
+    """The unified multi-gradient update on flat fp32 buffers — the jit/scan
+    friendly twin of the Pallas kernel's per-tile body (``ps_update._events``)
+    with the identical ``update_event`` math and combine einsum.
+
+    ``w``/``s``: (D,) fp32 (``s`` None for sgd); ``g``: (c, D); ``coef``/
+    ``lrs``: (c,).  This is what the compiled replay engine's scan executes
+    per update event (``core/engine.py``): one fused event over the whole
+    concatenated model instead of a per-leaf pytree walk."""
+    if not spec.kernel_supported:
+        raise ValueError(f"{spec.optimizer!r} has no flat event path")
+    g32 = g.astype(jnp.float32)
+    if mode == "combine":
+        ghat = jnp.einsum("cd,c->d", g32, coef.astype(jnp.float32))
+        return update_event(spec, w, s, ghat, lrs[0])
+    if mode != "sequential":
+        raise ValueError(f"unknown mode {mode!r}")
+    for i in range(g.shape[0]):                     # c is static
+        w, s = update_event(spec, w, s, coef[i] * g32[i], lrs[i])
+    return w, s
+
+
 # ---------------------------------------------------------------------------
 # pallas backend: one fused kernel launch over the concatenated model
 # ---------------------------------------------------------------------------

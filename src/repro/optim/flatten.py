@@ -51,6 +51,29 @@ def stack_grads_flat(grads: Sequence) -> jax.Array:
     return jnp.stack([tree_to_flat(g) for g in grads])
 
 
+def batched_tree_to_flat(tree) -> jax.Array:
+    """Pytree whose leaves share a leading batch axis → (B, D) fp32 (the
+    vmapped-gradient counterpart of :func:`stack_grads_flat`)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    b = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(b, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def batched_flat_to_tree(flat: jax.Array, layout: TreeLayout):
+    """(B, D) matrix → tree with a leading (B,) axis on every leaf — the
+    batched inverse used on ring-buffer gathers (one slice/reshape per leaf
+    instead of per (row, leaf))."""
+    b = flat.shape[0]
+    out: List = []
+    off = 0
+    for shape, dtype, size in zip(layout.shapes, layout.dtypes, layout.sizes):
+        out.append(flat[:, off:off + size].reshape((b,) + shape)
+                   .astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(layout.treedef, out)
+
+
 def flat_to_tree(flat: jax.Array, layout: TreeLayout):
     """Split a (D,) vector back into the original tree (leaf dtypes restored)."""
     out: List = []

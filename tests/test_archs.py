@@ -13,6 +13,8 @@ from repro.configs import ARCH_IDS, get_config, get_smoke, \
     long_context_variant
 from repro.core import init_opt_state, make_train_step
 from repro.data.pipeline import make_batch_fn
+
+pytestmark = pytest.mark.slow   # per-arch smoke sweep: the heavy lane
 from repro.models import (count_params, init_caches, init_model, model_loss,
                           model_forward)
 from repro.serve.engine import serve_step
@@ -63,7 +65,7 @@ def test_smoke_forward_shapes(arch):
 def test_smoke_decode_step(arch):
     cfg = get_smoke(arch)
     if cfg.encoder_only:
-        pytest.skip("encoder-only: no decode (DESIGN.md §4)")
+        pytest.skip("encoder-only: no decode (DESIGN.md §5)")
     params = init_model(cfg, jax.random.PRNGKey(0))
     caches = init_caches(cfg, B, 32)
     tok = jnp.zeros((B, 1), jnp.int32)

@@ -1,0 +1,84 @@
+"""Unit tests for the staleness accounting (paper §3.1, Eq. 2) and the
+vector-clock log's trace-native (matrix-backed) path, including the
+histogram edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.core.clock import StalenessRecord, VectorClockLog
+
+
+# ---------------------------------------------------------------------------
+# Eq.-2 accounting
+# ---------------------------------------------------------------------------
+def test_eq2_average_staleness():
+    rec = StalenessRecord(update_index=10, gradient_timestamps=[7, 8, 9])
+    assert rec.average_staleness == pytest.approx((10 - 1) - 8.0)
+    assert rec.staleness_values == [2, 1, 0]
+
+
+def test_eq2_fresh_gradient_zero_staleness():
+    # a gradient computed on the current weights (ts = i − 1) has σ = 0
+    rec = StalenessRecord(update_index=1, gradient_timestamps=[0, 0])
+    assert rec.staleness_values == [0, 0]
+    assert rec.average_staleness == 0.0
+
+
+def test_record_and_matrix_paths_agree():
+    ts = np.array([[0, 0], [0, 1], [1, 1], [2, 3]])
+    by_record = VectorClockLog()
+    for j, row in enumerate(ts):
+        by_record.record(j + 1, row.tolist())
+    by_matrix = VectorClockLog.from_matrix(ts)
+    np.testing.assert_array_equal(np.sort(by_record.all_staleness_values()),
+                                  np.sort(by_matrix.all_staleness_values()))
+    np.testing.assert_allclose(by_record.average_staleness_series(),
+                               by_matrix.average_staleness_series())
+    assert by_record.mean_staleness() == by_matrix.mean_staleness()
+    np.testing.assert_allclose(by_record.staleness_histogram(),
+                               by_matrix.staleness_histogram())
+    # lazily materialized records carry the Eq.-2 semantics
+    assert by_matrix.records[3].update_index == 4
+    assert by_matrix.records[3].staleness_values == [1, 0]
+
+
+def test_record_after_from_matrix_appends():
+    log = VectorClockLog.from_matrix(np.array([[0, 0]]))
+    log.record(2, [1, 1])
+    assert len(log.records) == 2
+    assert log.mean_staleness() == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# histogram edge cases
+# ---------------------------------------------------------------------------
+def test_histogram_empty_log_default():
+    h = VectorClockLog().staleness_histogram()
+    np.testing.assert_array_equal(h, [0.0])
+
+
+def test_histogram_empty_log_explicit_bins():
+    h = VectorClockLog().staleness_histogram(max_sigma=3)
+    np.testing.assert_array_equal(h, [0.0, 0.0, 0.0, 0.0])
+
+
+def test_histogram_explicit_max_sigma_zero():
+    log = VectorClockLog()
+    log.record(1, [0, 0])            # two σ = 0 gradients
+    log.record(2, [0])               # one σ = 1 gradient
+    h = log.staleness_histogram(max_sigma=0)
+    # single bin holding P(σ = 0); mass above max_sigma excluded
+    np.testing.assert_allclose(h, [2.0 / 3.0])
+
+
+def test_histogram_default_spans_max_observed():
+    log = VectorClockLog.from_matrix(np.array([[0], [0], [0]]))  # σ 0, 1, 2
+    h = log.staleness_histogram()
+    np.testing.assert_allclose(h, [1 / 3, 1 / 3, 1 / 3])
+    assert h.sum() == pytest.approx(1.0)
+
+
+def test_fraction_exceeding_and_mean_on_empty():
+    log = VectorClockLog()
+    assert log.fraction_exceeding(0) == 0.0
+    assert log.mean_staleness() == 0.0

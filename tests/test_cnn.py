@@ -26,12 +26,24 @@ def test_cnn_forward_shape_and_finite():
 
 
 def test_cnn_learns_prototype_task():
+    """Full-batch heavy-ball training halves the loss within 60 steps.
+
+    Plain GD cannot pass this at any LR in the 60-step budget: the cool
+    0.5×He init (see init_cnn) starts on a ~25-step low-gradient plateau,
+    and once past it the valley curvature makes α ≥ 0.05 oscillate (loss
+    bounces 1.30 → 1.63 between steps 50 and 60) while α ≤ 0.03 is stable
+    but needs ~100 steps to halve.  The paper's own vehicle (caffe
+    cifar10_full, §4.2) trains with momentum 0.9 — heavy-ball at
+    α = 0.008 crosses the plateau and reaches ratio ≈ 0.12 (≈ 0.09–0.24
+    across seeds) with stable neighbours at α = 0.006–0.008."""
     task = ImageTeacher(n_train=256, n_test=128)
     p = init_cnn(jax.random.PRNGKey(0))
     g = jax.jit(jax.grad(cnn_loss))
     x, y = jnp.asarray(task.x_train), jnp.asarray(task.y_train)
     l0 = float(cnn_loss(p, (x, y)))
+    v = jax.tree.map(jnp.zeros_like, p)
     for i in range(60):
-        p = jax.tree.map(lambda a, b: a - 0.05 * b, p, g(p, (x, y)))
+        v = jax.tree.map(lambda vv, gg: 0.9 * vv + gg, v, g(p, (x, y)))
+        p = jax.tree.map(lambda a, b: a - 0.008 * b, p, v)
     l1 = float(cnn_loss(p, (x, y)))
     assert l1 < l0 * 0.5, (l0, l1)

@@ -37,6 +37,11 @@ def test_teacher_task_balanced_and_deterministic():
     x1, y1 = t1.minibatch(3, 7, 16)
     x2, y2 = t1.minibatch(3, 7, 16)
     np.testing.assert_array_equal(x1, x2)
+    # distinct (learner, step) draw distinct batches
+    assert not np.array_equal(y1, t1.minibatch(3, 8, 16)[1])
+    # arbitrarily large seeds wrap into the 64-bit hash (no OverflowError)
+    xb, yb = t1.minibatch(3, 7, 16, seed=2 ** 63)
+    assert xb.shape == (16, t1.n_features)
 
 
 def test_prefetch_iterator_yields_all():

@@ -9,6 +9,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow   # subprocess lowering: the heavy lane
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = textwrap.dedent("""

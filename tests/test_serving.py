@@ -12,6 +12,8 @@ from repro.config import ModelConfig, RunConfig
 from repro.models import init_caches, init_model, model_forward
 from repro.serve.engine import generate, init_serve_state, prefill, serve_step
 
+pytestmark = pytest.mark.slow   # decode parity sweeps: the heavy lane
+
 RUN = RunConfig(attn_impl="chunked", attn_q_chunk=16, attn_kv_chunk=16)
 
 

@@ -1,0 +1,207 @@
+"""The compiled trace/replay engine (DESIGN.md §4) against its oracle, the
+legacy per-arrival loop: numerical equivalence on identical traces, the
+ring-buffer staleness bound, Fig.-4 statistics off the trace path, and the
+heterogeneous/straggler duration models."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RunConfig
+from repro.core import (replay, schedule, simulate, simulate_compiled,
+                        simulate_measure)
+from repro.core.trace import as_learner_sampler, make_duration_sampler
+
+
+# ---------------------------------------------------------------------------
+# shared toy problem: tiny linear regression, deterministic batches
+# ---------------------------------------------------------------------------
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (6, 3))
+X = jax.random.normal(jax.random.PRNGKey(1), (64, 6))
+Y = X @ W_TRUE
+
+
+def _loss(p, b):
+    x, y = b
+    return jnp.mean((x @ p - y) ** 2)
+
+
+GRAD_FN = jax.jit(jax.grad(_loss))
+
+
+def _batch_fn(l, i):
+    rng = np.random.default_rng(l * 9973 + i)
+    idx = rng.integers(0, 64, size=8)
+    return X[idx], Y[idx]
+
+
+def _clocks_matrix(log):
+    return np.array([r.gradient_timestamps for r in log.records])
+
+
+# ---------------------------------------------------------------------------
+# oracle equivalence: the acceptance grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("lam", [4, 8])
+@pytest.mark.parametrize("protocol,n", [("async", 1), ("softsync", 2),
+                                        ("hardsync", 1)])
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum"])
+@pytest.mark.parametrize("lr_policy", ["staleness_inverse", "per_gradient"])
+def test_replay_equals_legacy_loop(lam, protocol, n, optimizer, lr_policy):
+    run = RunConfig(protocol=protocol, n_softsync=n, n_learners=lam,
+                    minibatch=8, base_lr=0.05, lr_policy=lr_policy,
+                    optimizer=optimizer, seed=7 + lam)
+    kw = dict(steps=25, grad_fn=GRAD_FN, init_params=jnp.zeros((6, 3)),
+              batch_fn=_batch_fn)
+    legacy = simulate(run, **kw)
+    compiled = simulate_compiled(run, **kw)
+    np.testing.assert_allclose(np.asarray(compiled.params),
+                               np.asarray(legacy.params),
+                               atol=1e-5, rtol=1e-5)
+    # identical arrival order: vector clocks match exactly
+    np.testing.assert_array_equal(_clocks_matrix(compiled.clock_log),
+                                  _clocks_matrix(legacy.clock_log))
+    assert compiled.simulated_time == pytest.approx(legacy.simulated_time)
+    assert compiled.updates == legacy.updates
+
+
+def test_replay_equals_legacy_scalar_and_per_gradient_history():
+    """Eval histories line up (same update indices, times, and metrics)."""
+    run = RunConfig(protocol="softsync", n_softsync=4, n_learners=8,
+                    minibatch=8, base_lr=0.05, lr_policy="staleness_inverse",
+                    optimizer="momentum", seed=11)
+    eval_fn = lambda p: {"err": float(jnp.mean((X @ p - Y) ** 2))}
+    kw = dict(steps=40, grad_fn=GRAD_FN, init_params=jnp.zeros((6, 3)),
+              batch_fn=_batch_fn, eval_fn=eval_fn, eval_every=10)
+    legacy = simulate(run, **kw)
+    compiled = simulate_compiled(run, **kw)
+    assert len(compiled.history) == len(legacy.history) == 4
+    for a, b in zip(compiled.history, legacy.history):
+        assert a["update"] == b["update"]
+        assert a["time"] == pytest.approx(b["time"])
+        assert a["err"] == pytest.approx(b["err"], rel=1e-4, abs=1e-6)
+
+
+def test_schedule_matches_measure_mode():
+    """The schedule pass IS measure mode: same clocks, time, minibatches."""
+    run = RunConfig(protocol="softsync", n_softsync=4, n_learners=16,
+                    minibatch=16, seed=5)
+    tr = schedule(run, 300)
+    res = simulate_measure(run, steps=300)
+    np.testing.assert_array_equal(tr.pulled_ts,
+                                  _clocks_matrix(res.clock_log))
+    assert tr.simulated_time == pytest.approx(res.simulated_time)
+    assert tr.minibatches == res.minibatches
+
+
+# ---------------------------------------------------------------------------
+# Fig.-4 statistics and the ring-buffer bound, trace-native
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 2, 4, 30])
+def test_trace_fig4_statistics(n):
+    run = RunConfig(protocol="softsync", n_softsync=n, n_learners=30,
+                    minibatch=128, seed=3)
+    tr = schedule(run, 1500)
+    log = tr.clock_log()
+    assert abs(log.mean_staleness() - n) < max(1.0, 0.25 * n)
+    assert log.fraction_exceeding(2 * n) < 1e-3
+    # the ring-buffer size the replay engine derives is the 2n bound + slack
+    assert tr.max_staleness <= 2 * n + 2
+    assert (tr.staleness >= 0).all()
+
+
+def test_hardsync_trace_zero_staleness_and_k1():
+    run = RunConfig(protocol="hardsync", n_learners=10, minibatch=32)
+    tr = schedule(run, 40)
+    assert tr.max_staleness == 0          # replay keeps a single snapshot
+    assert tr.clock_log().mean_staleness() == 0.0
+    assert tr.c == 10 and tr.minibatches == 400
+
+
+# ---------------------------------------------------------------------------
+# duration models: two-speed heterogeneous cluster + Pareto stragglers
+# ---------------------------------------------------------------------------
+def test_two_speed_cluster_starves_slow_learners():
+    lam = 8
+    run = RunConfig(protocol="async", n_learners=lam, minibatch=16,
+                    duration_model="two_speed", slow_fraction=0.25,
+                    slow_factor=4.0, seed=2)
+    tr = schedule(run, 400)
+    counts = np.bincount(tr.learner.reshape(-1), minlength=lam)
+    n_slow = 2                                    # 0.25 · 8
+    assert counts[:n_slow].max() < counts[n_slow:].min()
+    # slow learners hold weights ~4× longer ⇒ their gradients are staler
+    sig = tr.staleness
+    slow_sig = sig[np.isin(tr.learner, np.arange(n_slow))].mean()
+    fast_sig = sig[~np.isin(tr.learner, np.arange(n_slow))].mean()
+    assert slow_sig > fast_sig
+
+
+def test_pareto_stragglers_heavier_tail_than_homogeneous():
+    base = dict(protocol="softsync", n_softsync=4, n_learners=16,
+                minibatch=16, seed=9)
+    homo = schedule(RunConfig(**base), 400)
+    par = schedule(RunConfig(duration_model="pareto", pareto_alpha=1.5,
+                             pareto_scale=1.0, **base), 400)
+    # heavy tail stretches the simulated clock and the staleness extremes
+    assert par.simulated_time > homo.simulated_time
+    assert par.staleness.max() >= homo.staleness.max()
+
+
+def test_legacy_two_arg_sampler_accepted():
+    run = RunConfig(protocol="softsync", n_softsync=2, n_learners=4,
+                    minibatch=8, seed=1)
+    tr = schedule(run, 50, duration_sampler=lambda rng, mu: 1.0)
+    assert tr.simulated_time > 0
+    s3 = as_learner_sampler(make_duration_sampler(run))
+    assert s3(np.random.default_rng(0), 8, 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# replay plumbing details
+# ---------------------------------------------------------------------------
+def test_replay_on_prescheduled_trace_with_hw_sampler():
+    """schedule() and replay() compose explicitly, with the runtime axis
+    read off the trace (core/tradeoff.minibatch_duration_sampler)."""
+    from repro.core import tradeoff as to
+    run = RunConfig(protocol="softsync", n_softsync=2, n_learners=4,
+                    minibatch=8, base_lr=0.05, optimizer="sgd", seed=0)
+    sampler = to.minibatch_duration_sampler("base", run.n_learners)
+    tr = schedule(run, 30, duration_sampler=sampler)
+    res = replay(tr, run, grad_fn=GRAD_FN, init_params=jnp.zeros((6, 3)),
+                 batch_fn=_batch_fn)
+    axis = to.runtime_axis(tr)
+    assert axis.shape == (30,) and (np.diff(axis) >= 0).all()
+    assert res.simulated_time == pytest.approx(float(axis[-1]))
+    assert np.isfinite(np.asarray(res.params)).all()
+
+
+def test_replay_rejects_mismatched_config():
+    """A trace is only valid for the RunConfig that scheduled it."""
+    import dataclasses
+    run = RunConfig(protocol="softsync", n_softsync=2, n_learners=4,
+                    minibatch=8, base_lr=0.05, optimizer="sgd", seed=0)
+    tr = schedule(run, 10)
+    kw = dict(grad_fn=GRAD_FN, init_params=jnp.zeros((6, 3)),
+              batch_fn=_batch_fn)
+    with pytest.raises(ValueError):                  # different c/λ
+        replay(tr, dataclasses.replace(run, n_learners=8), **kw)
+    with pytest.raises(ValueError):                  # silent-LR-sweep hazard
+        replay(tr, dataclasses.replace(run, base_lr=0.5), **kw)
+    with pytest.raises(ValueError):                  # policy/mode mismatch
+        replay(tr, dataclasses.replace(run, lr_policy="per_gradient"), **kw)
+
+
+def test_replay_learns_on_mlp_problem():
+    """End-to-end sanity: compiled engine actually trains (error drops)."""
+    run = RunConfig(protocol="softsync", n_softsync=4, n_learners=8,
+                    minibatch=8, base_lr=0.1, lr_policy="staleness_inverse",
+                    optimizer="momentum", seed=4)
+    res = simulate_compiled(run, steps=400, grad_fn=GRAD_FN,
+                            init_params=jnp.zeros((6, 3)),
+                            batch_fn=_batch_fn)
+    err = float(jnp.mean((X @ res.params - Y) ** 2))
+    err0 = float(jnp.mean(Y ** 2))
+    assert err < 0.1 * err0
