@@ -20,8 +20,7 @@ from benchmarks.common import MLPProblem, emit, save_json, updates_for_epochs
 from repro.config import RunConfig
 from repro.core.baselines import simulate_accrual, simulate_easgd, \
     simulate_ssp
-from repro.core.simulator import simulate, simulate_measure, \
-    _default_duration_sampler
+from repro.core.simulator import simulate, _default_duration_sampler
 
 
 def run(epochs: int = 8, base_lr: float = 0.35) -> dict:
@@ -118,10 +117,10 @@ def run(epochs: int = 8, base_lr: float = 0.35) -> dict:
         base = _default_duration_sampler(rng, m)
         return base * (10.0 if rng.integers(0, lam) == 0 else 1.0)
 
-    meas_uniform = simulate_measure(
+    meas_uniform = simulate(
         RunConfig(protocol="softsync", n_softsync=lam, n_learners=lam,
                   minibatch=mu, seed=29), steps=1500)
-    meas_straggle = simulate_measure(
+    meas_straggle = simulate(
         RunConfig(protocol="softsync", n_softsync=lam, n_learners=lam,
                   minibatch=mu, seed=29), steps=1500,
         duration_sampler=straggler_sampler)

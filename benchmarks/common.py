@@ -1,94 +1,40 @@
-"""Shared benchmark plumbing: the small SGD problem used for accuracy-axis
-experiments (CIFAR-scale stand-in, see DESIGN.md §8) and CSV/JSON helpers."""
+"""Shared benchmark plumbing: results-envelope writers and CSV emit.
+
+The MLP accuracy-axis problem and the epochs→updates conversion moved into
+the experiment surface (``repro.experiments.problems``, DESIGN.md §5) — the
+names are re-exported here for compatibility.  Results files all share the
+RunResult envelope (``repro.experiments.result``): RunResult ``records``
+plus free-form ``derived`` values (claim booleans, speedups, timings);
+``python -m repro.experiments.validate benchmarks/results`` gates the
+schema in CI.
+"""
 
 from __future__ import annotations
 
 import json
 import os
-import time
-from typing import Callable, Dict, List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.config import RunConfig
-from repro.data.synthetic import TeacherClassification
+from repro.experiments import MLPProblem, updates_for_epochs  # noqa: F401
+from repro.experiments import envelope
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
-def save_json(name: str, data) -> str:
+def save_results(name: str, records=(), derived=None) -> str:
+    """Write ``benchmarks/results/<name>.json`` in the shared envelope."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
-        json.dump(data, f, indent=1, default=float)
+        json.dump(envelope(name, records, derived), f, indent=1,
+                  default=float)
     return path
+
+
+def save_json(name: str, data) -> str:
+    """Legacy writer: free-form benchmark output → records-less envelope."""
+    return save_results(name, derived=data)
 
 
 def emit(name: str, value, derived: str = "") -> None:
     """CSV row: name,value,derived."""
     print(f"{name},{value},{derived}")
-
-
-# ---------------------------------------------------------------------------
-# MLP learner on the teacher-classification task (the paper's CNN stand-in)
-# ---------------------------------------------------------------------------
-class MLPProblem:
-    """2-layer MLP trained on TeacherClassification — the accuracy-axis
-    vehicle for Figs. 5-7 / Tables 2-4 (non-convex, overfits, LR-sensitive:
-    the properties the paper's claims depend on)."""
-
-    def __init__(self, hidden: int = 64, task: TeacherClassification = None,
-                 seed: int = 0):
-        self.task = task or TeacherClassification()
-        self.hidden = hidden
-        key = jax.random.PRNGKey(seed)
-        k1, k2 = jax.random.split(key)
-        nf, nc = self.task.n_features, self.task.n_classes
-        self.init = {
-            "w1": jax.random.normal(k1, (nf, hidden)) / np.sqrt(nf),
-            "b1": jnp.zeros((hidden,)),
-            "w2": jax.random.normal(k2, (hidden, nc)) / np.sqrt(hidden),
-            "b2": jnp.zeros((nc,)),
-        }
-        self._grad = jax.jit(jax.grad(self.loss))
-        self._test_err = jax.jit(self._test_err_impl)
-
-    def loss(self, p, batch):
-        x, y = batch
-        h = jnp.tanh(x @ p["w1"] + p["b1"])
-        logits = h @ p["w2"] + p["b2"]
-        logz = jax.nn.logsumexp(logits, axis=-1)
-        ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
-        return jnp.mean(logz - ll)
-
-    def _test_err_impl(self, p):
-        x, y = self.task.x_test, self.task.y_test
-        h = jnp.tanh(x @ p["w1"] + p["b1"])
-        pred = jnp.argmax(h @ p["w2"] + p["b2"], axis=-1)
-        return 1.0 - jnp.mean((pred == y).astype(jnp.float32))
-
-    def grad_fn(self, p, batch):
-        return self._grad(p, batch)
-
-    def batch_fn_for(self, mu: int, seed: int = 0) -> Callable:
-        # returns host (numpy) arrays: the jitted grad_fn transfers them on
-        # call, and the replay engine stages the whole trace's batches with
-        # ONE device transfer per leaf instead of one per minibatch.
-        def fn(learner: int, step: int):
-            return self.task.minibatch(learner, step, mu, seed=seed)
-        return fn
-
-    def test_error(self, p) -> float:
-        return float(self._test_err(p))
-
-    def eval_fn(self, p) -> Dict[str, float]:
-        return {"test_error": self.test_error(p)}
-
-
-def updates_for_epochs(epochs: int, mu: int, lam: int,
-                       dataset: int) -> int:
-    """Weight updates s.t. total samples == epochs·dataset (softsync counts
-    c·μ samples/update; hardsync λ·μ)."""
-    return max(1, int(epochs * dataset / (mu * lam)))

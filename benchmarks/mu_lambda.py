@@ -1,59 +1,57 @@
 """Paper Table 2 / §5.3: μλ = constant ⇒ ≈ constant test error, largely
 independent of staleness σ; error grows monotonically with the μλ product.
 
-Configurations mirror the paper's table scaled to the teacher task:
-groups μλ ≈ {128, 512} with σ ∈ {1, λ} (1-softsync / λ-softsync).
+Configurations mirror the paper's table scaled to the teacher task (groups
+μλ ≈ {128, 512, 4096} with σ ∈ {1, λ}), driven through the experiment
+surface (``ExperimentSpec`` → ``run_sweep``, DESIGN.md §5).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import MLPProblem, emit, save_json, updates_for_epochs
+from benchmarks.common import emit, save_results
 from repro.config import RunConfig
-from repro.core.simulator import simulate
-
-
-def _error(prob, n, mu, lam, epochs, base_lr):
-    cfg = RunConfig(protocol="softsync", n_softsync=n, n_learners=lam,
-                    minibatch=mu, base_lr=base_lr,
-                    lr_policy="staleness_inverse", optimizer="sgd", seed=9)
-    steps = updates_for_epochs(epochs, mu, cfg.gradients_per_update,
-                               prob.task.n_train)
-    res = simulate(cfg, steps=steps, grad_fn=prob.grad_fn,
-                   init_params=prob.init, batch_fn=prob.batch_fn_for(mu))
-    return prob.test_error(res.params), res.clock_log.mean_staleness()
+from repro.experiments import ExperimentSpec, run_sweep
 
 
 def run(epochs: int = 10, base_lr: float = 0.35) -> dict:
-    prob = MLPProblem()
     groups = {
         128: [(1, 4, 32), (32, 4, 32), (8, 16, 8), (1, 128, 1)],
         512: [(1, 16, 32), (32, 16, 32), (8, 64, 8), (1, 128, 4)],
         4096: [(1, 128, 32), (32, 128, 32), (8, 256, 16)],
     }
-    out = {}
+    specs, slots = [], []
     for prod, cfgs in groups.items():
-        errs = []
         for (n, mu, lam) in cfgs:
-            err, sig = _error(prob, n, mu, lam, epochs, base_lr)
-            out[f"prod={prod}/n={n}/mu={mu}/lam={lam}"] = {
-                "test_error": err, "measured_staleness": sig}
-            errs.append(err)
-            emit(f"table2/prod={prod}/sigma={n}/mu={mu}/lam={lam}",
-                 f"{err:.4f}", f"<sigma>={sig:.1f}")
+            specs.append(ExperimentSpec(
+                run=RunConfig(protocol="softsync", n_softsync=n,
+                              n_learners=lam, minibatch=mu, base_lr=base_lr,
+                              lr_policy="staleness_inverse", optimizer="sgd",
+                              seed=9),
+                problem="mlp_teacher", epochs=epochs,
+                tag=f"prod={prod}/n={n}/mu={mu}/lam={lam}"))
+            slots.append((prod, n, mu, lam))
+    results = run_sweep(specs)
+
+    out = {}
+    errs_by_prod = {prod: [] for prod in groups}
+    for (prod, n, mu, lam), res in zip(slots, results):
+        err, sig = res.metrics["test_error"], res.staleness["mean"]
+        out[res.tag] = {"test_error": err, "measured_staleness": sig}
+        errs_by_prod[prod].append(err)
+        emit(f"table2/prod={prod}/sigma={n}/mu={mu}/lam={lam}",
+             f"{err:.4f}", f"<sigma>={sig:.1f}")
+    for prod, errs in errs_by_prod.items():
         spread = float(np.max(errs) - np.min(errs))
         out[f"prod={prod}/spread"] = spread
         emit(f"table2/prod={prod}/error_spread", f"{spread:.4f}",
              "claim:small-within-group")
-    def group_mean(prod):
-        return float(np.mean([v["test_error"] for k, v in out.items()
-                              if k.startswith(f"prod={prod}/")
-                              and isinstance(v, dict)]))
-    mean_small, mean_big = group_mean(128), group_mean(4096)
+    mean_small = float(np.mean(errs_by_prod[128]))
+    mean_big = float(np.mean(errs_by_prod[4096]))
     emit("table2/error_grows_with_product", mean_big > mean_small,
          f"128:{mean_small:.3f} 4096:{mean_big:.3f}")
-    save_json("table2_mu_lambda", out)
+    save_results("table2_mu_lambda", records=results, derived=out)
     return out
 
 

@@ -1,28 +1,30 @@
-"""Legacy per-arrival loop vs compiled trace/replay engine (DESIGN.md §4).
+"""Simulator engine throughput: legacy loop vs compiled replay vs the
+batched sweep driver (DESIGN.md §4/§5).
 
-Measures PS-simulation throughput (weight updates/sec) on the MLP stand-in
-at λ ∈ {8, 32, 128}, μ = 4 (the paper's small-minibatch sweet spot,
-Table 3), for two protocol shapes:
+Part 1 — per-run engines on the MLP stand-in at λ ∈ {8, 32, 128}, μ = 4
+(the paper's small-minibatch sweet spot, Table 3), via the experiment
+surface with ``engine="legacy"`` vs the default compiled trace/replay:
 
 * ``1-softsync`` (c = λ) — the paper's Table-3 winner and the shape where
   the legacy loop hurts most: λ un-jitted ``grad_fn`` dispatches plus one
   host→device optimizer round-trip per update.
 * ``(λ/4)-softsync`` (c = 4) — staleness-heavy: the replay ring buffer K
   grows to ~2n while per-update work stays fixed.
-* ``λ-softsync`` (c = 1, Eq.-5 degenerate ≈ async) — the paper's maximal-
-  staleness regime: the ring buffer runs at its full K ≈ 2λ bound and the
-  legacy loop pays one complete dispatch round-trip per single-gradient
-  update.
+* ``λ-softsync`` (c = 1, Eq.-5 degenerate ≈ async) — maximal staleness:
+  the ring buffer runs at its full K ≈ 2λ bound and the legacy loop pays
+  one complete dispatch round-trip per single-gradient update.
 
-The compiled engine executes the whole trace as a single ``lax.scan`` with
-the c gradients of an event vmapped and the apply fused over the flat
-model (``optim.apply_event_flat``).
+Part 2 — the sweep headline: a 4-LR × 5-seed grid cell replayed as ONE
+vmapped device program with one vectorized staging pass
+(``run_sweep``/``core.engine.replay_batch``) vs the same grid executed as
+sequential per-spec replays (``run_sweep(batch=False)`` — the hand-wired
+pipeline every benchmark used before the experiment surface existed).
 
-Timing protocol: per configuration, both engines are warmed (jit compiles
-and the engine's one-time ``lax.scan`` compile are excluded — matching the
-sweep regime: one compile, many scenario replays), then timed on identical
-RunConfig/seed (identical traces).  ``max_param_drift`` cross-checks the
-oracle equivalence on the benchmarked runs themselves.
+Timing protocol: per configuration both paths are warmed (jit + scan
+compiles excluded — the sweep regime: one compile, many replays), then
+timed best-of-N end-to-end through the public API on identical
+RunConfig/seed grids (identical traces).  ``max_param_drift`` cross-checks
+result equivalence on the benchmarked runs themselves.
 
 Results → ``benchmarks/results/sim_engine_bench.json``; also surfaced by
 ``benchmarks/summary.py``.
@@ -35,42 +37,42 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import MLPProblem, emit, save_json
+from benchmarks.common import emit, save_results
 from repro.config import RunConfig
-from repro.core.engine import replay
-from repro.core.simulator import simulate
-from repro.core.trace import schedule
+from repro.experiments import ExperimentSpec, Sweep, run_sweep
+from repro.experiments import run as run_spec
 
 LAMBDAS = (8, 32, 128)
 MU = 4
 
 
-def _bench_one(prob, cfg: RunConfig, updates: int, warm_updates: int = 4,
+def _wait(res):
+    jnp.asarray(res.params["w1"]).block_until_ready()
+    return res
+
+
+def _best_of(fn, repeats: int = 5):
+    # min over repeats: discards scheduler noise on a shared CPU
+    times, res = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn()
+        times.append(time.perf_counter() - t0)
+    return min(times), res
+
+
+def _bench_one(cfg: RunConfig, updates: int, warm_updates: int = 4,
                repeats: int = 5) -> dict:
-    kw = dict(grad_fn=prob.grad_fn, init_params=prob.init,
-              batch_fn=prob.batch_fn_for(MU))
+    spec = ExperimentSpec(run=cfg, problem="mlp_teacher", steps=updates)
+    legacy_spec = spec.replace(engine="legacy")
 
-    def wait(res):
-        jnp.asarray(res.params["w1"]).block_until_ready()
-        return res
+    _wait(run_spec(legacy_spec.replace(steps=warm_updates)))  # legacy warmup
+    t_legacy, legacy = _best_of(lambda: _wait(run_spec(legacy_spec)), repeats)
 
-    def best_of(fn):
-        # min over repeats: discards scheduler noise on a shared CPU
-        times, res = [], None
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            res = wait(fn())
-            times.append(time.perf_counter() - t0)
-        return min(times), res
-
-    wait(simulate(cfg, steps=warm_updates, **kw))          # legacy warmup
-    t_legacy, legacy = best_of(lambda: simulate(cfg, steps=updates, **kw))
-
-    trace = schedule(cfg, updates)
     t0 = time.perf_counter()
-    wait(replay(trace, cfg, **kw))                         # scan compile
+    _wait(run_spec(spec))                                   # scan compile
     t_compile = time.perf_counter() - t0
-    t_replay, compiled = best_of(lambda: replay(trace, cfg, **kw))
+    t_replay, compiled = _best_of(lambda: _wait(run_spec(spec)), repeats)
 
     drift = float(jnp.max(jnp.abs(
         jnp.asarray(legacy.params["w2"]) -
@@ -79,7 +81,7 @@ def _bench_one(prob, cfg: RunConfig, updates: int, warm_updates: int = 4,
         "lambda": cfg.n_learners,
         "n_softsync": cfg.n_softsync,
         "c": cfg.gradients_per_update,
-        "ring_buffer_K": trace.max_staleness + 1,
+        "ring_buffer_K": compiled.staleness["ring_buffer_K"],
         "updates": updates,
         "legacy_updates_per_s": updates / t_legacy,
         "compiled_updates_per_s": updates / t_replay,
@@ -89,8 +91,48 @@ def _bench_one(prob, cfg: RunConfig, updates: int, warm_updates: int = 4,
     }
 
 
-def run(updates: int = 480) -> dict:
-    prob = MLPProblem()
+def _bench_sweep(updates: int = 60, lam: int = 32, mu: int = 1,
+                 seeds: int = 5, repeats: int = 3) -> dict:
+    """The batched-replay headline: 4 LRs × ``seeds`` seeds at 1-softsync
+    (c = λ — the Table-3 winner shape) in the small-μ regime where per-slot
+    staging dominates the hand-wired pipeline.  All grid points share one
+    trace shape, so the whole cell is ONE vmapped scan."""
+    base = ExperimentSpec(
+        run=RunConfig(protocol="softsync", n_softsync=1, n_learners=lam,
+                      minibatch=mu, base_lr=0.05,
+                      lr_policy="staleness_inverse", optimizer="momentum",
+                      seed=17),
+        problem="mlp_teacher", steps=updates)
+    sweep = Sweep.over(base, base_lr=[0.02, 0.05, 0.1, 0.2],
+                       seed=range(seeds))
+
+    def _wait_all(results):
+        for r in results:
+            jnp.asarray(r.params["w1"]).block_until_ready()
+        return results
+
+    _wait_all(run_sweep(sweep))                             # warm both paths
+    _wait_all(run_sweep(sweep, batch=False))
+    t_batch, batched = _best_of(lambda: _wait_all(run_sweep(sweep)), repeats)
+    t_seq, seq = _best_of(
+        lambda: _wait_all(run_sweep(sweep, batch=False)), repeats)
+    drift = max(
+        float(jnp.max(jnp.abs(jnp.asarray(a.params["w2"]) -
+                              jnp.asarray(b.params["w2"]))))
+        for a, b in zip(batched, seq))
+    return {
+        "grid": f"4xlr * {seeds}xseed",
+        "runs": 4 * seeds,
+        "protocol_shape": f"1-softsync lam={lam} c={lam} mu={mu}",
+        "updates_per_run": updates,
+        "sequential_s": t_seq,
+        "batched_s": t_batch,
+        "speedup": t_seq / t_batch,
+        "max_param_drift": drift,
+    }
+
+
+def run_bench(updates: int = 480) -> dict:
     out = {}
     for lam in LAMBDAS:
         for label, n in [("softsync_1", 1), ("softsync_quarter", lam // 4),
@@ -99,7 +141,7 @@ def run(updates: int = 480) -> dict:
                             n_learners=lam, minibatch=MU, base_lr=0.05,
                             lr_policy="staleness_inverse",
                             optimizer="momentum", seed=17)
-            row = _bench_one(prob, cfg, updates)
+            row = _bench_one(cfg, updates)
             out[f"{label}_lambda_{lam}"] = row
             emit(f"sim_engine/{label}/lambda={lam}/updates_per_s",
                  f"legacy={row['legacy_updates_per_s']:.1f} "
@@ -107,9 +149,21 @@ def run(updates: int = 480) -> dict:
                  f"speedup={row['speedup']:.1f}x c={row['c']} "
                  f"K={row['ring_buffer_K']} "
                  f"drift={row['max_param_drift']:.1e}")
-    save_json("sim_engine_bench", out)
+    # scale the sweep cell's per-run budget with the engine rows' budget so
+    # --quick stays quick
+    sweep_row = _bench_sweep(updates=max(10, updates // 8))
+    out["sweep_batched_vs_sequential"] = sweep_row
+    emit("sim_engine/sweep_batched/4lr_x_5seed",
+         f"sequential={sweep_row['sequential_s']:.2f}s "
+         f"batched={sweep_row['batched_s']:.2f}s",
+         f"speedup={sweep_row['speedup']:.1f}x "
+         f"drift={sweep_row['max_param_drift']:.1e}")
+    save_results("sim_engine_bench", derived=out)
     return out
 
 
+# benchmarks.run drives modules via their ``run`` attribute
+run = run_bench
+
 if __name__ == "__main__":
-    run()
+    run_bench()

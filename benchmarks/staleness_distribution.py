@@ -4,9 +4,10 @@ Validated claims:
   (a) 1-softsync / 2-softsync: ⟨σ⟩ stays ≈ 1 / 2; σ ∈ {0..2}/{0..4}.
   (b) λ-softsync (λ = 30): ⟨σ⟩ ≈ 30 and P(σ > 2n) < 1e-4.
 
-Runs on the schedule pass of the compiled simulator (``core/trace.py``) —
-the trace's vector-clock matrix gives Fig.-4 statistics vectorized, and its
-``max_staleness`` is the ring-buffer bound K−1 the replay engine would use.
+Runs through the experiment surface in **measure mode** (DESIGN.md §5): an
+``ExperimentSpec`` with ``problem=None`` executes the schedule pass alone
+and the RunResult's ``staleness`` block carries the Fig.-4 statistics
+(⟨σ⟩, σ extremes, P(σ > 2n), ring-buffer K, histogram, ⟨σ⟩-series head).
 A second sweep exercises the beyond-paper duration models (two-speed
 heterogeneous cluster and Pareto-tail stragglers, Dutta et al.) at fixed
 (λ, n) — the scenario axis the legacy per-arrival loop was too slow for.
@@ -14,32 +15,31 @@ heterogeneous cluster and Pareto-tail stragglers, Dutta et al.) at fixed
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, save_results
 from repro.config import RunConfig
-from repro.core.trace import schedule
+from repro.experiments import ExperimentSpec, Sweep, run_sweep
 
 
 def run(steps: int = 4000) -> dict:
     lam = 30
+    base = ExperimentSpec(
+        run=RunConfig(protocol="softsync", n_learners=lam, minibatch=128,
+                      seed=11),
+        steps=steps)
+    ns = [1, 2, 4, lam]
+    results = run_sweep(Sweep.over(base, n_softsync=ns))
     out = {}
-    for n in [1, 2, 4, lam]:
-        cfg = RunConfig(protocol="softsync", n_softsync=n, n_learners=lam,
-                        minibatch=128, seed=11)
-        trace = schedule(cfg, steps)
-        log = trace.clock_log()
-        series = log.average_staleness_series()
-        vals = log.all_staleness_values()
+    for n, res in zip(ns, results):
+        st = res.staleness
         row = {
             "n": n,
-            "mean_staleness": log.mean_staleness(),
-            "sigma_min": float(vals.min()),
-            "sigma_max": float(vals.max()),
-            "ring_buffer_K": trace.max_staleness + 1,
-            "frac_exceeding_2n": log.fraction_exceeding(2 * n),
-            "series_head": series[:50].tolist(),
-            "histogram": log.staleness_histogram().tolist(),
+            "mean_staleness": st["mean"],
+            "sigma_min": st["min"],
+            "sigma_max": st["max"],
+            "ring_buffer_K": st["ring_buffer_K"],
+            "frac_exceeding_2n": st["frac_exceeding_2n"],
+            "series_head": st["series_head"],
+            "histogram": st["histogram"],
         }
         out[f"softsync_{n}"] = row
         claim = (abs(row["mean_staleness"] - n) <= max(0.6, 0.15 * n)
@@ -52,27 +52,32 @@ def run(steps: int = 4000) -> dict:
 
     # ---- beyond-paper: straggler scenarios at fixed (λ, n) -----------------
     n = 4
-    for model, kw in [
-        ("homogeneous", {}),
-        ("two_speed", dict(slow_fraction=0.25, slow_factor=4.0)),
-        ("pareto", dict(pareto_alpha=1.5, pareto_scale=1.0)),
-    ]:
-        cfg = RunConfig(protocol="softsync", n_softsync=n, n_learners=lam,
-                        minibatch=128, seed=11, duration_model=model, **kw)
-        trace = schedule(cfg, steps)
-        log = trace.clock_log()
+    scen = Sweep.over(
+        base.replace(run=base.run.replace(n_softsync=n)),
+        cases=[
+            {"duration_model": "homogeneous", "tag": "homogeneous"},
+            {"duration_model": "two_speed", "slow_fraction": 0.25,
+             "slow_factor": 4.0, "tag": "two_speed"},
+            {"duration_model": "pareto", "pareto_alpha": 1.5,
+             "pareto_scale": 1.0, "tag": "pareto"},
+        ])
+    scen_results = run_sweep(scen)
+    for res in scen_results:
+        model = res.tag
+        st = res.staleness
         row = {
-            "mean_staleness": log.mean_staleness(),
-            "sigma_max": float(trace.max_staleness),
-            "frac_exceeding_2n": log.fraction_exceeding(2 * n),
-            "simulated_time": trace.simulated_time,
+            "mean_staleness": st["mean"],
+            "sigma_max": st["max"],
+            "frac_exceeding_2n": st["frac_exceeding_2n"],
+            "simulated_time": res.runtime["simulated_time"],
         }
         out[f"scenario_{model}"] = row
         emit(f"fig4scenario/{model}/mean_staleness",
              f"{row['mean_staleness']:.2f}",
              f"sigma_max={row['sigma_max']:.0f} "
              f"time={row['simulated_time']:.0f}s")
-    save_json("fig4_staleness", out)
+    save_results("fig4_staleness", records=results + scen_results,
+                 derived=out)
     return out
 
 

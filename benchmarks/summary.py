@@ -116,13 +116,19 @@ def run(epochs: int = 10) -> dict:
     bench = os.path.join(RESULTS_DIR, "sim_engine_bench.json")
     if os.path.exists(bench):
         with open(bench) as f:
-            rows = json.load(f)
+            rows = json.load(f).get("derived", {})   # RunResult envelope
         out["sim_engine"] = rows
         for key, r in sorted(rows.items()):
-            emit(f"summary/sim_engine/{key}",
-                 f"{r['compiled_updates_per_s']:.0f}up/s",
-                 f"legacy={r['legacy_updates_per_s']:.0f} "
-                 f"speedup={r['speedup']:.1f}x")
+            if "compiled_updates_per_s" in r:
+                emit(f"summary/sim_engine/{key}",
+                     f"{r['compiled_updates_per_s']:.0f}up/s",
+                     f"legacy={r['legacy_updates_per_s']:.0f} "
+                     f"speedup={r['speedup']:.1f}x")
+            elif "batched_s" in r:
+                emit(f"summary/sim_engine/{key}",
+                     f"{r['runs']}-run sweep {r['batched_s']:.2f}s batched",
+                     f"sequential={r['sequential_s']:.2f}s "
+                     f"speedup={r['speedup']:.1f}x")
     save_json("table3_4_summary", out)
     return out
 

@@ -1,9 +1,10 @@
 """Paper Figs. 6/7: (σ, μ, λ) tradeoff curves — test error vs training time
 for hardsync / 1-softsync / λ-softsync over the (μ, λ) grid.
 
-Error axis: SGD-mode event simulator on the teacher task (protocol-faithful
-staleness); time axis: the calibrated Rudra-base runtime model
-(core/tradeoff.py).  Validated qualitative claims:
+Error axis: the compiled trace/replay engine driven through the experiment
+surface (``run_sweep``; protocol-faithful staleness, oracle equivalence in
+``tests/test_trace_engine.py``); time axis: the calibrated Rudra-base
+runtime model (core/tradeoff.py).  Validated qualitative claims:
   * error grows with μλ along every contour;
   * reducing μ at fixed λ = max restores most of the hardsync-error gap;
   * training time falls monotonically with λ.
@@ -11,50 +12,42 @@ staleness); time axis: the calibrated Rudra-base runtime model
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import MLPProblem, emit, save_json, updates_for_epochs
+from benchmarks.common import emit, save_results
 from repro.config import RunConfig
 from repro.core import tradeoff as to
-from repro.core.simulator import simulate
-
-
-def _error_for(prob: MLPProblem, protocol: str, n: int, mu: int, lam: int,
-               epochs: int, base_lr: float) -> float:
-    policy = "sqrt_scale" if protocol == "hardsync" else "staleness_inverse"
-    cfg = RunConfig(protocol=protocol, n_softsync=n, n_learners=lam,
-                    minibatch=mu, base_lr=base_lr, lr_policy=policy,
-                    ref_batch=128, optimizer="sgd", seed=7)
-    steps = updates_for_epochs(epochs, mu, cfg.gradients_per_update,
-                               prob.task.n_train)
-    res = simulate(cfg, steps=steps, grad_fn=prob.grad_fn,
-                   init_params=prob.init, batch_fn=prob.batch_fn_for(mu))
-    return prob.test_error(res.params)
+from repro.experiments import ExperimentSpec, get_problem, run_sweep
 
 
 def run(epochs: int = 6, base_lr: float = 0.35,
         mus=(4, 16, 64, 128), lams=(1, 4, 10, 30)) -> dict:
-    prob = MLPProblem()
     hw = to.calibrate_to_baseline()
-    out = {}
+    specs, meta = [], []
     for proto, nfn in [("hardsync", lambda lam: 1),
                        ("softsync1", lambda lam: 1),
                        ("softsyncL", lambda lam: lam)]:
         base = "hardsync" if proto == "hardsync" else "softsync"
+        policy = "sqrt_scale" if base == "hardsync" else "staleness_inverse"
         for mu in mus:
             for lam in lams:
                 if lam == 1 and proto != "hardsync":
                     continue
-                err = _error_for(prob, base, nfn(lam), mu, lam, epochs,
-                                 base_lr)
-                t = to.training_time("base", base, mu, lam, hw,
-                                     to.WorkloadModel(
-                                         dataset_size=prob.task.n_train,
-                                         epochs=epochs))
-                out[f"{proto}/mu={mu}/lam={lam}"] = {
-                    "test_error": err, "train_time_s": t,
-                    "mu_lambda": mu * lam}
-    save_json("fig6_7_tradeoff", out)
+                specs.append(ExperimentSpec(
+                    run=RunConfig(protocol=base, n_softsync=nfn(lam),
+                                  n_learners=lam, minibatch=mu,
+                                  base_lr=base_lr, lr_policy=policy,
+                                  ref_batch=128, optimizer="sgd", seed=7),
+                    problem="mlp_teacher", epochs=epochs,
+                    tag=f"{proto}/mu={mu}/lam={lam}"))
+                meta.append((proto, base, mu, lam))
+    results = run_sweep(specs)
+
+    out = {}
+    wl = to.WorkloadModel(dataset_size=get_problem("mlp_teacher").dataset_size,
+                          epochs=epochs)
+    for (proto, base, mu, lam), res in zip(meta, results):
+        t = to.training_time("base", base, mu, lam, hw, wl)
+        out[res.tag] = {"test_error": res.metrics["test_error"],
+                        "train_time_s": t, "mu_lambda": mu * lam}
 
     # ---- claims -----------------------------------------------------------
     # error grows with μλ (compare smallest vs largest product, hardsync)
@@ -71,6 +64,7 @@ def run(epochs: int = 6, base_lr: float = 0.35,
     t1 = out["hardsync/mu=128/lam=1"]["train_time_s"]
     t30 = out["hardsync/mu=128/lam=30"]["train_time_s"]
     emit("fig6/time_falls_with_lambda", t30 < t1, f"{t1:.0f}s->{t30:.0f}s")
+    save_results("fig6_7_tradeoff", records=results, derived=out)
     return out
 
 

@@ -1,5 +1,11 @@
-"""Quickstart: train a small LM with the paper's n-softsync protocol and
-staleness-modulated learning rate, then generate from it.
+"""Quickstart: the repo in three moves.
+
+1. **Experiments** — the one public surface for the paper's studies: a
+   declarative ``ExperimentSpec`` executed by ``run()``, grids by
+   ``Sweep``/``run_sweep`` (shape-compatible cells replay as one vmapped
+   device program).  Every run returns a JSON-stable ``RunResult``.
+2. **Train** — the round-based softsync SPMD engine on a small LM.
+3. **Serve** — greedy generation with the KV-cache engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +13,7 @@ staleness-modulated learning rate, then generate from it.
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, RunConfig
-from repro.core import simulate_measure
+from repro.experiments import ExperimentSpec, Sweep, run, run_sweep
 from repro.serve.engine import generate
 from repro.train.loop import train
 
@@ -16,26 +22,42 @@ def main():
     cfg = ModelConfig(name="quickstart-lm", family="dense", n_layers=4,
                       d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
                       vocab_size=128, qk_norm=True)
-    run = RunConfig(protocol="softsync", n_softsync=4, n_learners=8,
-                    minibatch=2, base_lr=0.02, lr_policy="staleness_inverse",
-                    optimizer="momentum", attn_q_chunk=64, attn_kv_chunk=64)
+    run_cfg = RunConfig(protocol="softsync", n_softsync=4, n_learners=8,
+                        minibatch=2, base_lr=0.02,
+                        lr_policy="staleness_inverse", optimizer="momentum",
+                        attn_q_chunk=64, attn_kv_chunk=64)
 
-    # 1. the paper's staleness bookkeeping for this configuration
-    meas = simulate_measure(run, steps=500)
-    print(f"[protocol] n-softsync n={run.n_softsync}, λ={run.n_learners}, "
-          f"c={run.gradients_per_update} gradients/update")
-    print(f"[staleness] ⟨σ⟩={meas.clock_log.mean_staleness():.2f} "
-          f"(Eq.2), max={meas.clock_log.all_staleness_values().max():.0f} "
-          f"≤ 2n={2 * run.n_softsync}")
-    print(f"[lr] α = α₀/⟨σ⟩ = {run.learning_rate():.5f} (Eq. 6)")
+    # 1a. measure mode: the paper's staleness bookkeeping for this protocol
+    #     (an ExperimentSpec with no problem runs the schedule pass alone)
+    meas = run(ExperimentSpec(run=run_cfg, steps=500))
+    print(f"[protocol] n-softsync n={run_cfg.n_softsync}, "
+          f"λ={run_cfg.n_learners}, "
+          f"c={run_cfg.gradients_per_update} gradients/update")
+    print(f"[staleness] ⟨σ⟩={meas.staleness['mean']:.2f} (Eq.2), "
+          f"max={meas.staleness['max']:.0f} ≤ 2n={2 * run_cfg.n_softsync}")
+    print(f"[lr] α = α₀/⟨σ⟩ = {run_cfg.learning_rate():.5f} (Eq. 6)")
+
+    # 1b. an accuracy experiment + a 2-seed × 2-LR grid, batched on-device
+    spec = ExperimentSpec(
+        run=RunConfig(protocol="softsync", n_softsync=4, n_learners=8,
+                      minibatch=8, base_lr=0.2,
+                      lr_policy="staleness_inverse", optimizer="momentum"),
+        problem="mlp_teacher", steps=200)
+    res = run(spec)
+    print(f"[experiment] test_error={res.metrics['test_error']:.4f} "
+          f"sim_time={res.runtime['simulated_time']:.1f}s "
+          f"(record keys: {sorted(res.record())})")
+    grid = run_sweep(Sweep.over(spec, seed=[0, 1], base_lr=[0.1, 0.2]))
+    for r in grid:
+        print(f"[sweep] {r.tag}: {r.metrics['test_error']:.4f}")
 
     # 2. train with the round-based softsync engine
-    res = train(cfg, run, steps=150, batch=16, seq=64, eval_every=25,
+    res = train(cfg, run_cfg, steps=150, batch=16, seq=64, eval_every=25,
                 log=lambda s: print("[train]", s))
 
     # 3. serve: greedy generation with the KV-cache engine
     prompt = jnp.zeros((2, 8), jnp.int32)
-    out = generate(cfg, run, res.params, prompt, max_new_tokens=12)
+    out = generate(cfg, run_cfg, res.params, prompt, max_new_tokens=12)
     print("[generate]", out.tolist())
 
 

@@ -1,63 +1,57 @@
 """(σ, μ, λ) tradeoff mini-study — the paper's core experiment on a laptop.
 
-Sweeps protocols and mini-batch sizes with the compiled trace/replay PS
-simulator on the teacher-classification task and prints the tradeoff table
-the paper plots in Figs. 6/7 (error vs time), including the μλ = constant
-rule.  The runtime axis is read directly off the trace: the schedule pass
-runs with the calibrated per-minibatch cost model as its duration sampler
-(core/tradeoff.minibatch_duration_sampler), so the simulated clock of the
-last update IS the modeled wall-clock.  A final row shows the beyond-paper
-Pareto-straggler scenario (RunConfig.duration_model).
+Sweeps protocols and mini-batch sizes through the declarative experiment
+surface (``ExperimentSpec`` → ``Sweep`` → ``run_sweep``, DESIGN.md §5) on
+the teacher-classification task and prints the tradeoff table the paper
+plots in Figs. 6/7 (error vs time), including the μλ = constant rule.  The
+runtime axis is read directly off each run's trace: ``duration=
+"calibrated:base"`` schedules with the calibrated per-minibatch cost model
+(core/tradeoff.py), so ``RunResult.runtime["simulated_time"]`` IS the
+modeled wall-clock.  A final row shows the beyond-paper Pareto-straggler
+scenario (``RunConfig.duration_model``).
 
-    PYTHONPATH=src python examples/staleness_tradeoff.py
+    PYTHONPATH=src:. python examples/staleness_tradeoff.py
 """
 
-import numpy as np
-
-from benchmarks.common import MLPProblem, updates_for_epochs
 from repro.config import RunConfig
-from repro.core import tradeoff as to
-from repro.core.engine import replay
-from repro.core.trace import schedule
+from repro.experiments import ExperimentSpec, Sweep, run, run_sweep
 
 
 def main():
-    prob = MLPProblem()
-    hw = to.calibrate_to_baseline()
     epochs = 8
-    wl = to.WorkloadModel(dataset_size=prob.task.n_train, epochs=epochs)
+    base = ExperimentSpec(
+        run=RunConfig(minibatch=128, base_lr=0.35, ref_batch=128,
+                      optimizer="sgd", seed=1),
+        problem="mlp_teacher", epochs=epochs, duration="calibrated:base")
+    sweep = Sweep.over(base, cases=[
+        {"protocol": "hardsync", "n_learners": 1, "minibatch": 128,
+         "lr_policy": "sqrt_scale"},              # the paper's baseline
+        {"protocol": "hardsync", "n_learners": 30, "minibatch": 128,
+         "lr_policy": "sqrt_scale"},
+        {"protocol": "hardsync", "n_learners": 30, "minibatch": 4,
+         "lr_policy": "sqrt_scale"},
+        {"protocol": "softsync", "n_softsync": 1, "n_learners": 30,
+         "minibatch": 128, "lr_policy": "staleness_inverse"},
+        {"protocol": "softsync", "n_softsync": 1, "n_learners": 30,
+         "minibatch": 4, "lr_policy": "staleness_inverse"},
+        {"protocol": "softsync", "n_softsync": 30, "n_learners": 30,
+         "minibatch": 128, "lr_policy": "staleness_inverse"},   # ≈ async
+        {"protocol": "softsync", "n_softsync": 30, "n_learners": 30,
+         "minibatch": 4, "lr_policy": "staleness_inverse"},
+    ])
+
     print(f"{'config':<38} {'test err':>9} {'time(trace)':>12} "
           f"{'<sigma>':>8}")
     rows = []
-    for proto, n_of, mu, lam in [
-        ("hardsync", lambda l: 1, 128, 1),       # the paper's baseline
-        ("hardsync", lambda l: 1, 128, 30),
-        ("hardsync", lambda l: 1, 4, 30),
-        ("softsync", lambda l: 1, 128, 30),      # 1-softsync
-        ("softsync", lambda l: 1, 4, 30),
-        ("softsync", lambda l: l, 128, 30),      # λ-softsync (≈ async)
-        ("softsync", lambda l: l, 4, 30),
-    ]:
-        n = n_of(lam)
-        policy = "sqrt_scale" if proto == "hardsync" else "staleness_inverse"
-        cfg = RunConfig(protocol=proto, n_softsync=n, n_learners=lam,
-                        minibatch=mu, base_lr=0.35, lr_policy=policy,
-                        ref_batch=128, optimizer="sgd", seed=1)
-        steps = updates_for_epochs(epochs, mu, cfg.gradients_per_update,
-                                   prob.task.n_train)
-        # schedule with the calibrated cost model; one trace per scenario
-        sampler = to.minibatch_duration_sampler("base", lam, hw, wl)
-        trace = schedule(cfg, steps, duration_sampler=sampler)
-        res = replay(trace, cfg, grad_fn=prob.grad_fn,
-                     init_params=prob.init, batch_fn=prob.batch_fn_for(mu))
-        err = prob.test_error(res.params)
-        # epochs·dataset samples have been consumed when the trace ends —
-        # the runtime axis is the trace's own clock (scaled per epoch).
-        t = trace.simulated_time
-        sig = res.clock_log.mean_staleness()
-        label = f"{proto}(n={n}) mu={mu} lam={lam}"
+    for res in run_sweep(sweep):
+        cfg = res.spec["run"]
+        err = res.metrics["test_error"]
+        t = res.runtime["simulated_time"]
+        sig = res.staleness["mean"]
+        label = (f"{cfg['protocol']}(n={cfg['n_softsync']}) "
+                 f"mu={cfg['minibatch']} lam={cfg['n_learners']}")
         print(f"{label:<38} {err:>9.4f} {t:>11.0f}s {sig:>8.2f}")
-        rows.append((mu * lam, err))
+        rows.append((cfg["minibatch"] * cfg["n_learners"], err))
 
     print("\nμλ = constant rule: error grouped by μλ product")
     for prod in sorted({p for p, _ in rows}):
@@ -67,20 +61,17 @@ def main():
 
     # beyond-paper scenario: heavy-tail stragglers stretch the runtime axis
     # at (nearly) unchanged error — the staleness bound still holds.
-    cfg = RunConfig(protocol="softsync", n_softsync=1, n_learners=30,
-                    minibatch=4, base_lr=0.35,
-                    lr_policy="staleness_inverse", optimizer="sgd", seed=1,
-                    duration_model="pareto", pareto_alpha=1.5,
-                    pareto_scale=1.0)
-    steps = updates_for_epochs(epochs, 4, cfg.gradients_per_update,
-                               prob.task.n_train)
-    trace = schedule(cfg, steps)
-    res = replay(trace, cfg, grad_fn=prob.grad_fn, init_params=prob.init,
-                 batch_fn=prob.batch_fn_for(4))
+    res = run(base.replace(
+        run=base.run.replace(protocol="softsync", n_softsync=1,
+                             n_learners=30, minibatch=4,
+                             lr_policy="staleness_inverse",
+                             duration_model="pareto", pareto_alpha=1.5,
+                             pareto_scale=1.0),
+        duration="config"))
     print(f"\npareto stragglers: softsync(n=1) mu=4 lam=30  "
-          f"err={prob.test_error(res.params):.4f}  "
-          f"<sigma>={res.clock_log.mean_staleness():.2f}  "
-          f"sim_time={trace.simulated_time:.0f} "
+          f"err={res.metrics['test_error']:.4f}  "
+          f"<sigma>={res.staleness['mean']:.2f}  "
+          f"sim_time={res.runtime['simulated_time']:.0f} "
           f"(homogeneous clock would be shorter)")
 
 

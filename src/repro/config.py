@@ -315,6 +315,12 @@ class RunConfig:
         if self.duration_model not in DURATION_MODELS:
             raise ValueError(f"unknown duration_model {self.duration_model!r}")
 
+    def replace(self, **kw) -> "RunConfig":
+        """A copy with ``kw`` fields changed — ``dataclasses.replace`` with
+        ``__post_init__`` validation re-run (the frozen-dataclass contract),
+        so sweep builders don't import ``dataclasses`` everywhere."""
+        return dataclasses.replace(self, **kw)
+
     @property
     def gradients_per_update(self) -> int:
         """c = ⌊λ/n⌋ (Eq. 5).  hardsync: exactly λ."""
@@ -348,7 +354,7 @@ class RunConfig:
 def validate_pairing(model: ModelConfig, shape: InputShape) -> Optional[str]:
     """Return a skip-reason string if (model, shape) must be skipped, else None.
 
-    Skips mirror DESIGN.md §5: encoder-only models have no decode step;
+    Skips mirror DESIGN.md §6: encoder-only models have no decode step;
     full-attention models need a sliding-window variant for long_500k (all of
     ours implement it, so only encoder-only skips remain).
     """

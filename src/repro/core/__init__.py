@@ -8,7 +8,7 @@ from repro.core.lr_policies import (make_lr_policy, hardsync_lr, softsync_lr,
                                     resolve_trace_lrs)
 from repro.core.trace import (ArrivalTrace, make_duration_sampler, schedule)
 from repro.core.simulator import simulate, simulate_measure, SimResult
-from repro.core.engine import replay, simulate_compiled
+from repro.core.engine import replay, replay_batch, simulate_compiled
 from repro.core.distributed import (make_train_step, make_hardsync_step,
                                     make_softsync_step, init_opt_state,
                                     round_event_lrs, fused_coefficients)
@@ -19,7 +19,7 @@ __all__ = [
     "make_lr_policy", "hardsync_lr", "softsync_lr", "resolve_trace_lrs",
     "ArrivalTrace", "make_duration_sampler", "schedule",
     "simulate", "simulate_measure", "SimResult",
-    "replay", "simulate_compiled",
+    "replay", "replay_batch", "simulate_compiled",
     "make_train_step", "make_hardsync_step", "make_softsync_step",
     "init_opt_state", "round_event_lrs", "fused_coefficients",
 ]

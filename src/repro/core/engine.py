@@ -29,7 +29,8 @@ traces is pinned by ``tests/test_trace_engine.py`` (EXPERIMENTS.md §Sim).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+import warnings
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +58,7 @@ def _unstack_tree(tree, c: int):
 
 @functools.lru_cache(maxsize=32)
 def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
-                  layout: flatten.TreeLayout):
+                  layout: flatten.TreeLayout, batched: bool = False):
     """The jitted scan over update events — cached per static config so
     repeated replays (benchmark/sweep loops) reuse the compiled program;
     the LRU bound keeps long-lived processes from pinning every grad_fn
@@ -69,6 +70,18 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
     fused ``optim.apply_event_flat`` over the whole model — the scan body
     is the jnp twin of the Pallas ``ps_update`` tile.  adamw (scalar step
     counter, no kernel path) falls back to the pytree apply.
+
+    ``batched=True`` returns ``jit(vmap(scan))``: the identical per-event
+    body mapped over a leading batch axis of B independent grid points —
+    one device program executes a whole multi-seed/multi-config sweep cell
+    (``replay_batch``).  The ring-buffer *write* position (and the previous
+    snapshot's row) depend only on the step index and the shared K, so
+    ``prev``/``slot`` stay unbatched (``in_axes=None``): the per-event ring
+    update remains a dynamic-update-slice at a common row instead of a
+    per-lane scatter — the difference between the batched scan keeping the
+    (B, K, D) ring in place and copying it every event.  Only ``ts`` (which
+    snapshots each lane's c gradients read), ``lrs``, and the minibatches
+    are per-lane.
     """
     coef = jnp.full((c,), 1.0 / c, jnp.float32)
 
@@ -93,13 +106,17 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
             ring = ring.at[x["slot"]].set(flatten.tree_to_flat(params))
             return (ring, (params, opt_state)), None
 
-    @jax.jit
     def run(carry, xs):
-        # unroll a few events per while-loop iteration: the body is tiny
-        # (one fused event), so loop bookkeeping is a measurable fraction
-        return jax.lax.scan(event, carry, xs, unroll=8)[0]
+        # single lane: unroll a few events per while-loop iteration (the
+        # body is tiny, loop bookkeeping is a measurable fraction).  The
+        # batched body is B× wider — unrolling only bloats its code and
+        # measured ~25% slower, so the vmapped scan stays rolled.
+        return jax.lax.scan(event, carry, xs, unroll=1 if batched else 8)[0]
 
-    return run
+    if batched:
+        axes = {"ts": 0, "prev": None, "slot": None, "lrs": 0, "batch": 0}
+        return jax.jit(jax.vmap(run, in_axes=(0, axes)))
+    return jax.jit(run)
 
 
 def _materialize_batches(trace: ArrivalTrace, batch_fn: Callable):
@@ -114,6 +131,47 @@ def _materialize_batches(trace: ArrivalTrace, batch_fn: Callable):
         rows.append(jax.tree.map(
             lambda *xs: np.stack([np.asarray(x) for x in xs]), *slots))
     return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *rows)
+
+
+def _check_trace(trace: ArrivalTrace, run: RunConfig) -> None:
+    """A trace is only valid for the RunConfig that scheduled it."""
+    if (trace.protocol != run.protocol
+            or trace.n_learners != run.n_learners
+            or trace.c != run.gradients_per_update):
+        raise ValueError(
+            f"trace ({trace.protocol}, λ={trace.n_learners}, c={trace.c}) "
+            f"was not scheduled from this RunConfig ({run.protocol}, "
+            f"λ={run.n_learners}, c={run.gradients_per_update})")
+    # the trace bakes policy-resolved LRs in; re-resolving from this run's
+    # policy must reproduce them, or the caller is silently sweeping
+    # base_lr/lr_policy on a stale trace
+    want_lrs, want_mode = resolve_trace_lrs(run, trace.pulled_ts)
+    if trace.mode != want_mode or not np.allclose(trace.lrs, want_lrs):
+        raise ValueError(
+            f"trace LRs/mode ({trace.mode}) disagree with this RunConfig's "
+            f"lr_policy={run.lr_policy!r}/base_lr={run.base_lr} — reschedule "
+            f"the trace for this config")
+
+
+def _trace_xs(trace: ArrivalTrace, K: int, batch_fn: Optional[Callable],
+              batches=None) -> dict:
+    """The scan inputs of one trace: ring indices (pre-wrapped mod K),
+    per-event LRs, and the whole trace's minibatches — materialized per
+    slot via ``batch_fn``, or taken pre-staged from ``batches`` (a pytree
+    with leading (steps, c) axes, e.g. a problem's vectorized
+    ``stage_minibatches`` output)."""
+    steps_idx = np.arange(trace.steps)
+    if batches is None:
+        batches = _materialize_batches(trace, batch_fn)
+    else:
+        batches = jax.tree.map(jnp.asarray, batches)
+    return {
+        "ts": jnp.asarray(trace.pulled_ts % K, jnp.int32),
+        "prev": jnp.asarray(steps_idx % K, jnp.int32),
+        "slot": jnp.asarray((steps_idx + 1) % K, jnp.int32),
+        "lrs": jnp.asarray(trace.lrs, jnp.float32),
+        "batch": batches,
+    }
 
 
 def replay(trace: ArrivalTrace, run: RunConfig, *,
@@ -134,22 +192,7 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
     scan length and compiles a second program — pick eval_every | steps in
     compile-sensitive sweeps.
     """
-    if (trace.protocol != run.protocol
-            or trace.n_learners != run.n_learners
-            or trace.c != run.gradients_per_update):
-        raise ValueError(
-            f"trace ({trace.protocol}, λ={trace.n_learners}, c={trace.c}) "
-            f"was not scheduled from this RunConfig ({run.protocol}, "
-            f"λ={run.n_learners}, c={run.gradients_per_update})")
-    # the trace bakes policy-resolved LRs in; re-resolving from this run's
-    # policy must reproduce them, or the caller is silently sweeping
-    # base_lr/lr_policy on a stale trace
-    want_lrs, want_mode = resolve_trace_lrs(run, trace.pulled_ts)
-    if trace.mode != want_mode or not np.allclose(trace.lrs, want_lrs):
-        raise ValueError(
-            f"trace LRs/mode ({trace.mode}) disagree with this RunConfig's "
-            f"lr_policy={run.lr_policy!r}/base_lr={run.base_lr} — reschedule "
-            f"the trace for this config")
+    _check_trace(trace, run)
     steps, c = trace.steps, trace.c
     K = trace.max_staleness + 1
     spec, opt_state = init_ps_state(run, init_params)
@@ -157,14 +200,7 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
 
     scan_fn = _make_scan_fn(grad_fn, spec, trace.mode, c, K, layout)
 
-    steps_idx = np.arange(steps)
-    xs = {
-        "ts": jnp.asarray(trace.pulled_ts % K, jnp.int32),
-        "prev": jnp.asarray(steps_idx % K, jnp.int32),
-        "slot": jnp.asarray((steps_idx + 1) % K, jnp.int32),
-        "lrs": jnp.asarray(trace.lrs, jnp.float32),
-        "batch": _materialize_batches(trace, batch_fn),
-    }
+    xs = _trace_xs(trace, K, batch_fn)
     flat0 = flatten.tree_to_flat(init_params)
     ring = jnp.broadcast_to(flat0, (K, flat0.shape[0]))
     if spec.kernel_supported:
@@ -201,6 +237,124 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
                      trace.minibatches, params, history)
 
 
+def replay_batch(traces: Sequence[ArrivalTrace],
+                 runs: Sequence[RunConfig], *,
+                 grad_fn: Callable,
+                 init_params,
+                 batch_fns: Optional[Sequence[Callable]] = None,
+                 batches: Optional[Sequence] = None,
+                 eval_fn: Optional[Callable] = None,
+                 eval_every: int = 0) -> list:
+    """Replay B shape-compatible traces as ONE vmapped device program.
+
+    The sweep fast path (DESIGN.md §5): grid points that share trace shape
+    — same ``steps`` and ``c`` (and therefore the same scan length and
+    event arity) — plus the same optimizer spec, update mode, ``grad_fn``
+    and parameter layout differ only in *data*: ring indices, LRs, and
+    minibatches.  Stacking those along a leading (B,) axis and vmapping the
+    identical per-event scan body executes a 5-seed × 4-config cell as one
+    ``lax.scan`` instead of 20 sequential replays.  The ring is sized to
+    the **group maximum** staleness (ring size never changes the math —
+    only which row a snapshot lands in), so traces with different measured
+    σ_max still batch.
+
+    Per-lane results match :func:`replay` of the same trace to fp32
+    accumulation tolerance (the vmapped body computes the same per-lane
+    math, but XLA fuses the batched ops differently — observed drift
+    ~1e-7 after tens of updates, same order as the legacy-vs-compiled
+    drift in EXPERIMENTS.md §Sim).
+    Restrictions (the driver falls back to sequential replays otherwise):
+    kernel-supported optimizers only (sgd / momentum / adagrad — adamw's
+    pytree carry has no flat lane layout), one shared ``grad_fn`` and
+    ``init_params`` (same problem), per-lane ``batch_fns`` — or per-lane
+    pre-staged ``batches`` (leading (steps, c) axes; a problem's vectorized
+    ``stage_minibatches``), which skips the per-slot staging loop entirely.
+    """
+    traces, runs = list(traces), list(runs)
+    B = len(traces)
+    if (batch_fns is None) == (batches is None):
+        raise ValueError("pass exactly one of batch_fns / batches")
+    lanes = list(batch_fns) if batches is None else list(batches)
+    if not (B and len(runs) == B and len(lanes) == B):
+        raise ValueError("traces / runs / batch data must align, non-empty")
+    for trace, run in zip(traces, runs):
+        _check_trace(trace, run)
+    steps, c, mode = traces[0].steps, traces[0].c, traces[0].mode
+    for trace in traces[1:]:
+        if (trace.steps, trace.c, trace.mode) != (steps, c, mode):
+            raise ValueError(
+                f"batch members must share trace shape: "
+                f"(steps={steps}, c={c}, mode={mode!r}) vs "
+                f"(steps={trace.steps}, c={trace.c}, mode={trace.mode!r})")
+    spec = optim.spec_from_run(runs[0])
+    for run in runs[1:]:
+        other = optim.spec_from_run(run)
+        if other != spec:
+            raise ValueError(f"batch members must share the optimizer "
+                             f"spec: {spec} vs {other}")
+    opt_state = optim.init_state(spec, init_params)
+    if not spec.kernel_supported:
+        raise ValueError(f"{spec.optimizer!r} has no flat lane layout; "
+                         f"replay each trace sequentially")
+    K = max(trace.max_staleness for trace in traces) + 1
+    layout = flatten.layout_of(init_params)
+    scan_fn = _make_scan_fn(grad_fn, spec, mode, c, K, layout, batched=True)
+
+    if batches is None:
+        xs_lanes = [_trace_xs(trace, K, fn)
+                    for trace, fn in zip(traces, lanes)]
+    else:
+        xs_lanes = [_trace_xs(trace, K, None, batches=b)
+                    for trace, b in zip(traces, lanes)]
+    # prev/slot are step-indexed mod the shared K — identical in every lane;
+    # keep them unbatched so the scan's ring write stays a common-row
+    # dynamic-update-slice (see _make_scan_fn)
+    xs = jax.tree.map(
+        lambda *a: jnp.stack(a),
+        *[{k: v for k, v in lane.items() if k not in ("prev", "slot")}
+          for lane in xs_lanes])
+    xs["prev"] = xs_lanes[0]["prev"]
+    xs["slot"] = xs_lanes[0]["slot"]
+    flat0 = flatten.tree_to_flat(init_params)
+    ring = jnp.broadcast_to(flat0, (B, K) + flat0.shape)
+    s0 = None
+    if spec.state_keys:
+        s_flat = flatten.tree_to_flat(opt_state[spec.state_keys[0]])
+        s0 = jnp.broadcast_to(s_flat, (B,) + s_flat.shape)
+    carry = (ring, s0)
+
+    def params_of(carry, lane, done):
+        return _unflatten_jit(layout)(carry[0][lane, done % K])
+
+    def segment(lo, hi):
+        # prev/slot are unbatched (steps,); everything else is (B, steps, …)
+        return {k: (v[lo:hi] if k in ("prev", "slot")
+                    else jax.tree.map(lambda a: a[:, lo:hi], v))
+                for k, v in xs.items()}
+
+    histories = [[] for _ in range(B)]
+    if eval_fn and eval_every:
+        done = 0
+        while done < steps:
+            take = min(eval_every, steps - done)
+            seg = segment(done, done + take)
+            carry = scan_fn(carry, seg)
+            done += take
+            if done % eval_every == 0:
+                for b in range(B):
+                    histories[b].append(
+                        {"update": done,
+                         "time": float(traces[b].event_time[done - 1]),
+                         **eval_fn(params_of(carry, b, done))})
+    else:
+        carry = scan_fn(carry, xs)
+
+    return [SimResult(trace.clock_log(), steps, trace.simulated_time,
+                      trace.minibatches, params_of(carry, b, steps),
+                      histories[b])
+            for b, trace in enumerate(traces)]
+
+
 def simulate_compiled(run: RunConfig, *,
                       steps: int,
                       grad_fn: Optional[Callable] = None,
@@ -210,12 +364,17 @@ def simulate_compiled(run: RunConfig, *,
                       eval_every: int = 0,
                       duration_sampler: Optional[Callable] = None
                       ) -> SimResult:
-    """Drop-in counterpart of ``core.simulator.simulate`` on the compiled
-    trace/replay path: schedule once, then replay (or, with ``grad_fn``
-    left None, return the measure-mode result straight off the trace)."""
-    trace = schedule(run, steps, duration_sampler=duration_sampler)
-    if grad_fn is None:
-        return SimResult(trace.clock_log(), trace.steps,
-                         trace.simulated_time, trace.minibatches)
-    return replay(trace, run, grad_fn=grad_fn, init_params=init_params,
-                  batch_fn=batch_fn, eval_fn=eval_fn, eval_every=eval_every)
+    """DEPRECATED shim: the canonical driver is ``repro.experiments``
+    (``run(ExperimentSpec(...))``); raw-callable escapes go through
+    ``repro.experiments.driver.execute``.  Kept one release for callers of
+    the PR-2 surface; same signature, same SimResult."""
+    warnings.warn(
+        "simulate_compiled is deprecated: drive experiments through "
+        "repro.experiments.run(ExperimentSpec(...)) — or "
+        "repro.experiments.driver.execute for raw grad_fn/batch_fn "
+        "callables", DeprecationWarning, stacklevel=2)
+    from repro.experiments.driver import execute   # lazy: layering, no cycle
+    return execute(run, steps=steps, grad_fn=grad_fn,
+                   init_params=init_params, batch_fn=batch_fn,
+                   eval_fn=eval_fn, eval_every=eval_every,
+                   duration_sampler=duration_sampler, engine="compiled")

@@ -88,9 +88,10 @@ def simulate(run: RunConfig,
     ``run.duration_model``; 2-arg ``(rng, mu)`` callables are accepted.
     ``ps_backend`` picks the ``repro.optim`` backend of the host PS.
     """
-    if grad_fn is None:                       # measure mode
-        return simulate_measure(run, steps=steps,
-                                duration_sampler=duration_sampler)
+    if grad_fn is None:                       # measure mode == the schedule
+        tr = trace_mod.schedule(run, steps, duration_sampler=duration_sampler)
+        return SimResult(tr.clock_log(), tr.steps, tr.simulated_time,
+                         tr.minibatches)
 
     lam = run.n_learners
     rng = np.random.default_rng(run.seed)
@@ -165,8 +166,15 @@ def simulate(run: RunConfig,
 def simulate_measure(run: RunConfig, *, steps: int,
                      duration_sampler: Optional[Callable] = None
                      ) -> SimResult:
-    """Staleness-only simulation (no gradients) — fast path for Fig. 4.
-    Thin wrapper over the schedule pass: the trace IS the measurement."""
-    tr = trace_mod.schedule(run, steps, duration_sampler=duration_sampler)
-    return SimResult(tr.clock_log(), tr.steps, tr.simulated_time,
-                     tr.minibatches)
+    """DEPRECATED shim: measure mode is an ``ExperimentSpec`` with
+    ``problem=None`` — ``repro.experiments.run`` returns the Fig.-4
+    statistics as a RunResult record.  Kept one release for callers of the
+    pre-experiments surface; same signature, same SimResult."""
+    import warnings
+    warnings.warn(
+        "simulate_measure is deprecated: use repro.experiments.run("
+        "ExperimentSpec(run=cfg, steps=n)) for measure-mode statistics",
+        DeprecationWarning, stacklevel=2)
+    from repro.experiments.driver import execute   # lazy: layering, no cycle
+    return execute(run, steps=steps, duration_sampler=duration_sampler,
+                   engine="measure")

@@ -47,6 +47,26 @@ class TeacherClassification:
         h = np.tanh(x @ self.W1)
         return np.argmax(h @ self.W2, axis=-1).astype(np.int32)
 
+    def _indices(self, learner: np.ndarray, step: np.ndarray, mu: int,
+                 seed: int) -> np.ndarray:
+        """splitmix64 indices for (…,) learner/step counter arrays → (…, mu).
+        One hash implementation serves the scalar per-arrival path and the
+        whole-trace vectorized staging path (bit-identical by construction)."""
+        # (seed·M + learner)·M + step  mod 2^64, M = 1_000_003 — the seed
+        # term folds in python-int space (arbitrarily large seeds wrap),
+        # the counter terms in uint64 space (wrapping unsigned arithmetic)
+        m = np.uint64(1_000_003)
+        seed_term = np.uint64((seed * 1_000_003 * 1_000_003)
+                              & 0xFFFFFFFFFFFFFFFF)
+        base = (seed_term + learner.astype(np.uint64) * m
+                + step.astype(np.uint64))
+        z = base[..., None] + (np.arange(1, mu + 1, dtype=np.uint64)
+                               * np.uint64(0x9E3779B97F4A7C15))
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+        return (z % np.uint64(self.n_train)).astype(np.int64)
+
     def minibatch(self, learner: int, step: int, mu: int,
                   seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         """getMinibatch: random sampling, deterministic per (learner, step).
@@ -55,14 +75,18 @@ class TeacherClassification:
         learner, step, slot) counter instead of a freshly constructed
         Generator — this is the simulators' per-arrival hot path (a
         ``default_rng`` construction costs ~80 μs, the hash ~2 μs)."""
-        base = np.uint64(((seed * 1_000_003 + learner) * 1_000_003 + step)
-                         & 0xFFFFFFFFFFFFFFFF)
-        z = base + (np.arange(1, mu + 1, dtype=np.uint64)
-                    * np.uint64(0x9E3779B97F4A7C15))
-        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-        z = z ^ (z >> np.uint64(31))
-        idx = (z % np.uint64(self.n_train)).astype(np.int64)
+        idx = self._indices(np.asarray(learner), np.asarray(step), mu, seed)
+        return self.x_train[idx], self.y_train[idx]
+
+    def minibatch_array(self, learner: np.ndarray, step: np.ndarray,
+                        mu: int, seed: int = 0
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """All minibatches of a trace in ONE vectorized hash: ``learner`` /
+        ``step`` are (steps, c) counter matrices; returns (steps, c, μ, F)
+        inputs and (steps, c, μ) labels, element-for-element identical to
+        per-slot :meth:`minibatch` calls (~75× cheaper per trace — the sweep
+        driver's staging pass)."""
+        idx = self._indices(np.asarray(learner), np.asarray(step), mu, seed)
         return self.x_train[idx], self.y_train[idx]
 
     @property

@@ -1,0 +1,37 @@
+"""One experiment surface (DESIGN.md §5): declarative ``ExperimentSpec`` →
+``run()`` → ``RunResult``, with ``Sweep`` grids batched on-device.
+
+    from repro.config import RunConfig
+    from repro.experiments import ExperimentSpec, Sweep, run, run_sweep
+
+    spec = ExperimentSpec(
+        run=RunConfig(protocol="softsync", n_softsync=4, n_learners=30,
+                      minibatch=32, base_lr=0.35,
+                      lr_policy="staleness_inverse", optimizer="momentum"),
+        problem="mlp_teacher", epochs=4, eval_every=50)
+    res = run(spec)                        # schedule → compiled replay
+    res.metrics["test_error"], res.runtime["simulated_time"]
+
+    grid = Sweep.over(spec, seed=range(5), base_lr=[0.1, 0.35])
+    results = run_sweep(grid)              # shape-compatible cells vmapped
+
+Everything a run produces lands in the RunResult record (config echo,
+final/curve metrics, trace-derived runtime axis, staleness statistics,
+JSON round-trip) — the schema shared by ``benchmarks/results/*.json``.
+"""
+
+from repro.experiments.driver import execute, run, run_sweep
+from repro.experiments.problems import (MLPProblem, get_problem,
+                                        problem_names, register_problem,
+                                        updates_for_epochs)
+from repro.experiments.result import (RunResult, SCHEMA_VERSION, envelope,
+                                      validate_record, validate_results_file)
+from repro.experiments.spec import ExperimentSpec
+from repro.experiments.sweep import Sweep
+
+__all__ = [
+    "ExperimentSpec", "Sweep", "RunResult", "run", "run_sweep", "execute",
+    "MLPProblem", "register_problem", "get_problem", "problem_names",
+    "updates_for_epochs",
+    "SCHEMA_VERSION", "envelope", "validate_record", "validate_results_file",
+]

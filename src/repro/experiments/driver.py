@@ -1,0 +1,219 @@
+"""The one experiment driver: ``run(spec) -> RunResult`` (DESIGN.md §5).
+
+``run`` executes a declarative :class:`ExperimentSpec` end-to-end —
+resolve problem and budget, schedule the arrival trace, replay it on the
+compiled engine (or the legacy per-arrival oracle, or measure-only), and
+fold trace + metrics into a :class:`RunResult` record.
+
+``run_sweep`` executes a grid.  Its performance headline: grid points
+whose traces are **shape-compatible** (same steps and c — e.g. a 5-seed ×
+4-LR cell at fixed protocol shape) and share problem/optimizer/μ are
+replayed as ONE vmapped device program (``core.engine.replay_batch``)
+instead of sequential replays; everything else falls back to per-spec
+:func:`run` semantics.  Results always come back in spec order and are
+identical to sequential execution (``tests/test_experiments.py``).
+
+``execute`` is the raw-callable escape hatch — the old
+``simulate_compiled`` / ``simulate_measure`` surfaces are deprecated shims
+over it — for callers with a hand-written ``grad_fn``/``batch_fn`` instead
+of a registered problem.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from repro.config import RunConfig
+from repro.core.engine import replay, replay_batch
+from repro.core.simulator import SimResult, simulate
+from repro.core.trace import ArrivalTrace, schedule
+from repro.experiments.result import RunResult
+from repro.experiments.spec import ExperimentSpec
+from repro.experiments.sweep import Sweep
+from repro.optim import spec_from_run
+
+
+def execute(run_cfg: RunConfig, *,
+            steps: int,
+            grad_fn: Optional[Callable] = None,
+            init_params=None,
+            batch_fn: Optional[Callable] = None,
+            eval_fn: Optional[Callable] = None,
+            eval_every: int = 0,
+            duration_sampler: Optional[Callable] = None,
+            engine: str = "compiled") -> SimResult:
+    """Run one simulation from raw callables (no problem registry).
+
+    ``engine``: "compiled" (schedule + lax.scan replay; measure-only when
+    ``grad_fn`` is None), "measure" (schedule pass only), or "legacy" (the
+    per-arrival oracle loop in ``core/simulator.py``).
+    """
+    if engine == "legacy":
+        return simulate(run_cfg, steps=steps, grad_fn=grad_fn,
+                        init_params=init_params, batch_fn=batch_fn,
+                        eval_fn=eval_fn, eval_every=eval_every,
+                        duration_sampler=duration_sampler)
+    if engine not in ("compiled", "measure"):
+        raise ValueError(f"unknown engine {engine!r}")
+    trace = schedule(run_cfg, steps, duration_sampler=duration_sampler)
+    if grad_fn is None or engine == "measure":
+        return SimResult(trace.clock_log(), trace.steps,
+                         trace.simulated_time, trace.minibatches)
+    return replay(trace, run_cfg, grad_fn=grad_fn, init_params=init_params,
+                  batch_fn=batch_fn, eval_fn=eval_fn, eval_every=eval_every)
+
+
+# ---------------------------------------------------------------------------
+# spec → RunResult
+# ---------------------------------------------------------------------------
+_SERIES_HEAD = 50
+
+
+def _staleness_stats(trace: ArrivalTrace, run_cfg: RunConfig) -> Dict:
+    """The Fig.-4 statistics block of every record, off the trace."""
+    log = trace.clock_log()
+    vals = log.all_staleness_values()
+    expected = run_cfg.expected_staleness
+    return {
+        "mean": log.mean_staleness(),
+        "min": float(vals.min()) if len(vals) else 0.0,
+        "max": float(vals.max()) if len(vals) else 0.0,
+        "expected": expected,
+        "frac_exceeding_2n": log.fraction_exceeding(2 * max(1.0, expected)),
+        "ring_buffer_K": trace.max_staleness + 1,
+        "histogram": log.staleness_histogram().tolist(),
+        "series_head": log.average_staleness_series()[:_SERIES_HEAD].tolist(),
+    }
+
+
+def _result(spec: ExperimentSpec, trace: ArrivalTrace,
+            sim: Optional[SimResult], problem) -> RunResult:
+    metrics: Dict = {}
+    curve: List[Dict] = []
+    params = None
+    if sim is not None and sim.params is not None:
+        params = sim.params
+        metrics = dict(problem.eval_fn(params))
+        curve = list(sim.history or [])
+    return RunResult(
+        spec=spec.echo(),
+        metrics=metrics,
+        curve=curve,
+        runtime={"simulated_time": trace.simulated_time,
+                 "updates": trace.steps,
+                 "minibatches": trace.minibatches},
+        staleness=_staleness_stats(trace, spec.run),
+        params=params,
+        trace=trace,
+    )
+
+
+class _Job:
+    """One grid point, scheduled: everything replay needs, plus its slot."""
+
+    def __init__(self, index: int, spec: ExperimentSpec):
+        self.index = index
+        self.spec = spec
+        self.engine = spec.resolved_engine()
+        self.steps = spec.resolved_steps()
+        self.problem = spec.resolve_problem()
+        self.trace = schedule(spec.run, self.steps,
+                              duration_sampler=spec.duration_sampler())
+
+    @property
+    def batch_fn(self):
+        return self.problem.batch_fn_for(self.spec.run.minibatch)
+
+    def staged_batches(self):
+        """The whole trace's minibatches via the problem's vectorized
+        staging hook (None if the problem only offers per-slot batch_fn) —
+        one hash/gather pass instead of a steps×c Python loop, feeding the
+        batched replay's stacked (B, steps, c, …) inputs."""
+        stage = getattr(self.problem, "stage_minibatches", None)
+        if stage is None:
+            return None
+        return stage(self.trace.learner, self.trace.mb_index,
+                     self.spec.run.minibatch)
+
+    def batch_key(self):
+        """Grid points with equal keys replay as one vmapped program:
+        same problem (⇒ same grad_fn/init/batch shapes), same trace shape
+        (steps, c), same optimizer event, same μ and eval schedule."""
+        if self.engine != "compiled" or self.problem is None:
+            return None
+        opt = spec_from_run(self.spec.run)
+        if not opt.kernel_supported:
+            return None
+        return (id(self.problem), self.steps, self.trace.c, self.trace.mode,
+                opt, self.spec.run.minibatch, self.spec.eval_every)
+
+    def run_single(self) -> RunResult:
+        if self.engine == "measure":
+            return _result(self.spec, self.trace, None, None)
+        if self.engine == "legacy":
+            sim = simulate(self.spec.run, steps=self.steps,
+                           grad_fn=self.problem.grad_fn,
+                           init_params=self.problem.init,
+                           batch_fn=self.batch_fn,
+                           eval_fn=self.problem.eval_fn,
+                           eval_every=self.spec.eval_every,
+                           duration_sampler=self.spec.duration_sampler())
+            return _result(self.spec, self.trace, sim, self.problem)
+        sim = replay(self.trace, self.spec.run,
+                     grad_fn=self.problem.grad_fn,
+                     init_params=self.problem.init,
+                     batch_fn=self.batch_fn,
+                     eval_fn=self.problem.eval_fn,
+                     eval_every=self.spec.eval_every)
+        return _result(self.spec, self.trace, sim, self.problem)
+
+
+def run(spec: ExperimentSpec) -> RunResult:
+    """Execute one ExperimentSpec.  THE public entry point."""
+    return _Job(0, spec).run_single()
+
+
+def run_sweep(sweep: Union[Sweep, Sequence[ExperimentSpec]], *,
+              batch: bool = True) -> List[RunResult]:
+    """Execute a grid of specs; results in spec order.
+
+    ``batch=True`` (default) replays shape-compatible compiled grid points
+    as one vmapped program per group; ``batch=False`` forces sequential
+    per-spec execution (the equivalence oracle in tests/benchmarks).
+    """
+    specs = list(sweep)
+    jobs = [_Job(i, s) for i, s in enumerate(specs)]
+    results: List[Optional[RunResult]] = [None] * len(jobs)
+
+    groups: Dict = {}
+    if batch:
+        for job in jobs:
+            key = job.batch_key()
+            if key is not None:
+                groups.setdefault(key, []).append(job)
+
+    done = set()
+    for key, members in groups.items():
+        if len(members) < 2:
+            continue
+        staged = [j.staged_batches() for j in members]
+        if any(s is None for s in staged):
+            staged = None
+        sims = replay_batch(
+            [j.trace for j in members],
+            [j.spec.run for j in members],
+            grad_fn=members[0].problem.grad_fn,
+            init_params=members[0].problem.init,
+            batch_fns=(None if staged else [j.batch_fn for j in members]),
+            batches=staged,
+            eval_fn=members[0].problem.eval_fn,
+            eval_every=members[0].spec.eval_every)
+        for job, sim in zip(members, sims):
+            results[job.index] = _result(job.spec, job.trace, sim,
+                                         job.problem)
+            done.add(job.index)
+
+    for job in jobs:
+        if job.index not in done:
+            results[job.index] = job.run_single()
+    return results

@@ -1,0 +1,142 @@
+"""Problem registry for the experiment surface (DESIGN.md §5).
+
+An :class:`ExperimentSpec` names its problem declaratively (a registry key +
+keyword arguments) so a spec stays a frozen, JSON-serializable value; the
+driver resolves the name to a **problem object** exposing the contract the
+replay engine needs:
+
+* ``init``                 — the initial parameter pytree;
+* ``grad_fn(params, batch) -> grads`` — vmappable gradient;
+* ``batch_fn_for(mu, seed) -> (learner, minibatch_idx) -> batch`` — host
+  (numpy) batches, deterministic per (seed, learner, step);
+* ``eval_fn(params) -> dict`` — the metric set (keys are metric names);
+* ``dataset_size``         — samples per epoch (steps-from-epochs maths).
+
+Problems are cached per (name, args): a sweep over 20 (protocol, seed) grid
+points builds the teacher task and its jitted grad/eval functions once, and
+every grid point shares the same ``grad_fn`` — the property that lets the
+driver vmap shape-compatible grid points through one compiled scan.
+
+``mlp_teacher`` — the repo's CIFAR-scale stand-in (2-layer MLP on the
+teacher-classification task, DESIGN.md §9) — ships registered;
+:func:`register_problem` adds new ones (see ``tests/test_experiments.py``
+for a 4-line linear-regression example).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import TeacherClassification
+
+
+def updates_for_epochs(epochs: float, mu: int, c: int, dataset: int) -> int:
+    """Weight updates s.t. total samples == epochs·dataset (every update
+    consumes c·μ samples; hardsync has c = λ)."""
+    return max(1, int(epochs * dataset / (mu * c)))
+
+
+# ---------------------------------------------------------------------------
+# MLP learner on the teacher-classification task (the paper's CNN stand-in)
+# ---------------------------------------------------------------------------
+class MLPProblem:
+    """2-layer MLP trained on TeacherClassification — the accuracy-axis
+    vehicle for Figs. 5-7 / Tables 2-4 (non-convex, overfits, LR-sensitive:
+    the properties the paper's claims depend on)."""
+
+    def __init__(self, hidden: int = 64, task: TeacherClassification = None,
+                 seed: int = 0):
+        self.task = task or TeacherClassification()
+        self.hidden = hidden
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        nf, nc = self.task.n_features, self.task.n_classes
+        self.init = {
+            "w1": jax.random.normal(k1, (nf, hidden)) / np.sqrt(nf),
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, nc)) / np.sqrt(hidden),
+            "b2": jnp.zeros((nc,)),
+        }
+        self._grad = jax.jit(jax.grad(self.loss))
+        self._test_err = jax.jit(self._test_err_impl)
+
+    @property
+    def dataset_size(self) -> int:
+        return self.task.n_train
+
+    def loss(self, p, batch):
+        x, y = batch
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - ll)
+
+    def _test_err_impl(self, p):
+        x, y = self.task.x_test, self.task.y_test
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        pred = jnp.argmax(h @ p["w2"] + p["b2"], axis=-1)
+        return 1.0 - jnp.mean((pred == y).astype(jnp.float32))
+
+    def grad_fn(self, p, batch):
+        return self._grad(p, batch)
+
+    def batch_fn_for(self, mu: int, seed: int = 0) -> Callable:
+        # returns host (numpy) arrays: the jitted grad_fn transfers them on
+        # call, and the replay engine stages the whole trace's batches with
+        # ONE device transfer per leaf instead of one per minibatch.
+        def fn(learner: int, step: int):
+            return self.task.minibatch(learner, step, mu, seed=seed)
+        return fn
+
+    def stage_minibatches(self, learner, mb_index, mu: int, seed: int = 0):
+        """Whole-trace staging in one vectorized hash (optional problem
+        protocol, see DESIGN.md §5): (steps, c) counter matrices → the
+        (steps, c, …) batch pytree, element-identical to per-slot
+        ``batch_fn`` calls.  This is what lets ``run_sweep`` stage a whole
+        sweep cell in milliseconds instead of a steps×c Python loop per
+        grid point."""
+        return self.task.minibatch_array(learner, mb_index, mu, seed=seed)
+
+    def test_error(self, p) -> float:
+        return float(self._test_err(p))
+
+    def eval_fn(self, p) -> Dict[str, float]:
+        return {"test_error": self.test_error(p)}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Callable] = {}
+_CACHE: Dict[Tuple, object] = {}
+
+
+def register_problem(name: str, factory: Callable) -> None:
+    """Register ``factory(**kwargs) -> problem`` under ``name``.  The factory
+    result must expose init / grad_fn / batch_fn_for / eval_fn /
+    dataset_size (see module docstring)."""
+    _REGISTRY[name] = factory
+
+
+def problem_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_problem(name: str, args: Tuple[Tuple[str, object], ...] = ()):
+    """Resolve (and cache) a registered problem.  ``args`` is the spec's
+    hashable ``problem_args`` tuple-of-pairs."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown problem {name!r}; registered: "
+                       f"{problem_names()}")
+    key = (name, tuple(args))
+    if key not in _CACHE:
+        _CACHE[key] = _REGISTRY[name](**dict(args))
+    return _CACHE[key]
+
+
+register_problem("mlp_teacher", MLPProblem)

@@ -1,0 +1,148 @@
+"""RunResult: the stable record schema every experiment emits (DESIGN.md §5).
+
+One :class:`RunResult` per executed :class:`~repro.experiments.spec
+.ExperimentSpec`:
+
+* ``spec``      — the config echo (RunConfig + experiment fields);
+* ``metrics``   — final metric values (the problem's ``eval_fn`` keys);
+* ``curve``     — eval history rows ``{"update", "time", **metrics}``;
+* ``runtime``   — trace-derived runtime axis summary (simulated seconds of
+  the last update, updates, minibatches consumed);
+* ``staleness`` — Fig.-4 statistics off the trace (⟨σ⟩, σ_max, P(σ > 2n),
+  ring-buffer K, histogram, ⟨σ⟩-series head).
+
+The JSON form is the *record*; ``params``/``trace`` ride along in memory
+only (a record must stay diff-able and loadable without JAX).  Results
+files under ``benchmarks/results/`` share one envelope —
+``{"schema_version", "benchmark", "records": [...], "derived": {...}}`` —
+with every record validating against :func:`validate_record`
+(``python -m repro.experiments.validate`` gates this in CI).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+RECORD_KEYS = ("schema_version", "spec", "metrics", "curve", "runtime",
+               "staleness")
+ENVELOPE_KEYS = ("schema_version", "benchmark", "records", "derived")
+
+
+def _jsonable(x):
+    """numpy scalars/arrays → plain python (json.dump chokes on np types)."""
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return [_jsonable(v) for v in x.tolist()]
+    if isinstance(x, (np.floating, np.integer, np.bool_)):
+        return x.item()
+    return x
+
+
+@dataclasses.dataclass
+class RunResult:
+    """The result of one experiment run.  JSON-stable fields only in
+    :meth:`record`; device-side outputs stay in-memory attributes."""
+
+    spec: Dict[str, Any]
+    metrics: Dict[str, float]
+    curve: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+    runtime: Dict[str, float] = dataclasses.field(default_factory=dict)
+    staleness: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schema_version: int = SCHEMA_VERSION
+    # ---- in-memory only (never serialized) --------------------------------
+    params: Any = dataclasses.field(default=None, repr=False, compare=False)
+    trace: Any = dataclasses.field(default=None, repr=False, compare=False)
+
+    @property
+    def tag(self) -> str:
+        return self.spec.get("tag", "")
+
+    def record(self) -> Dict[str, Any]:
+        """The stable JSON record (config echo + results, no arrays)."""
+        return _jsonable({
+            "schema_version": self.schema_version,
+            "spec": self.spec,
+            "metrics": self.metrics,
+            "curve": self.curve,
+            "runtime": self.runtime,
+            "staleness": self.staleness,
+        })
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.record(), **kw)
+
+    @classmethod
+    def from_record(cls, d: Dict[str, Any]) -> "RunResult":
+        validate_record(d)
+        return cls(spec=d["spec"], metrics=d["metrics"], curve=d["curve"],
+                   runtime=d["runtime"], staleness=d["staleness"],
+                   schema_version=d["schema_version"])
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunResult":
+        return cls.from_record(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# validation — the CI gate for benchmarks/results/*.json
+# ---------------------------------------------------------------------------
+def validate_record(d: Dict[str, Any], where: str = "record") -> None:
+    """Raise ValueError unless ``d`` is a valid RunResult record."""
+    if not isinstance(d, dict):
+        raise ValueError(f"{where}: not an object")
+    missing = [k for k in RECORD_KEYS if k not in d]
+    if missing:
+        raise ValueError(f"{where}: missing keys {missing}")
+    if d["schema_version"] != SCHEMA_VERSION:
+        raise ValueError(f"{where}: schema_version {d['schema_version']} != "
+                         f"{SCHEMA_VERSION}")
+    for key, typ in (("spec", dict), ("metrics", dict), ("curve", list),
+                     ("runtime", dict), ("staleness", dict)):
+        if not isinstance(d[key], typ):
+            raise ValueError(f"{where}: {key} must be {typ.__name__}")
+    if "run" not in d["spec"]:
+        raise ValueError(f"{where}: spec echo lacks the RunConfig ('run')")
+    for i, row in enumerate(d["curve"]):
+        if not isinstance(row, dict) or "update" not in row:
+            raise ValueError(f"{where}: curve[{i}] lacks 'update'")
+
+
+def envelope(benchmark: str, records=(),
+             derived: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The shared results-file shape: RunResult records + free-form derived
+    values (claim booleans, speedup tables, timing comparisons)."""
+    recs = [r.record() if isinstance(r, RunResult) else r for r in records]
+    return _jsonable({"schema_version": SCHEMA_VERSION,
+                      "benchmark": benchmark,
+                      "records": recs,
+                      "derived": derived or {}})
+
+
+def validate_results_file(path: str) -> int:
+    """Validate one results JSON against the envelope + record schema.
+    Returns the number of records checked; raises ValueError on violation."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        raise ValueError(f"{path}: not an object")
+    missing = [k for k in ENVELOPE_KEYS if k not in data]
+    if missing:
+        raise ValueError(f"{path}: missing envelope keys {missing}")
+    if data["schema_version"] != SCHEMA_VERSION:
+        raise ValueError(f"{path}: schema_version {data['schema_version']}")
+    if not isinstance(data["records"], list):
+        raise ValueError(f"{path}: records must be a list")
+    if not isinstance(data["derived"], dict):
+        raise ValueError(f"{path}: derived must be an object")
+    for i, rec in enumerate(data["records"]):
+        validate_record(rec, where=f"{path}: records[{i}]")
+    return len(data["records"])

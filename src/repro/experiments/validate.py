@@ -1,0 +1,51 @@
+"""Validate results files against the RunResult record schema.
+
+    PYTHONPATH=src python -m repro.experiments.validate benchmarks/results
+
+Walks every ``*.json`` under the given paths (or the default
+``benchmarks/results``), checks the envelope + each record
+(``result.validate_results_file``), and exits non-zero on any violation —
+the CI smoke lane's schema gate.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import sys
+
+from repro.experiments.result import validate_results_file
+
+
+def validate_paths(paths) -> int:
+    """Validate every results JSON under ``paths``; returns the number of
+    files checked, raising ValueError on the first violation."""
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(sorted(glob.glob(os.path.join(p, "*.json"))))
+        else:
+            files.append(p)
+    for path in files:
+        n = validate_results_file(path)
+        print(f"[validate] {path}: ok ({n} records)")
+    return len(files)
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or \
+        [os.path.join("benchmarks", "results")]
+    try:
+        n = validate_paths(paths)
+    except ValueError as e:
+        print(f"[validate] FAIL: {e}", file=sys.stderr)
+        return 1
+    if n == 0:
+        print("[validate] no results files found", file=sys.stderr)
+        return 1
+    print(f"[validate] {n} file(s) conform to the RunResult record schema")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the perf-critical compute layers (DESIGN.md §7):
+"""Pallas TPU kernels for the perf-critical compute layers (DESIGN.md §8):
 
 * ``ps_update``        — fused PS applyUpdate (the paper's hot-spot)
 * ``flash_attention``  — blockwise attention, causal/window tile skipping

@@ -68,7 +68,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = rl.normalize_cost_analysis(compiled.cost_analysis())
         hlo = compiled.as_text()
 
     roof = rl.analyse(arch, shape_name, mesh_name, n_chips(mesh),
@@ -109,7 +109,7 @@ def _probe_costs(cfg, shape, mesh, run, engine, mode_override=None):
                                         mode_override=mode_override)
         lowered = fn.lower(*arg_specs)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        cost = rl.normalize_cost_analysis(compiled.cost_analysis())
         coll = rl.collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll["total"], coll)
@@ -163,7 +163,7 @@ def probe_roofline(arch: str, shape_name: str, *, multi_pod: bool = False,
                                    attn_kv_chunk=attn_kv_chunk,
                                    seq_par_residual=seq_par_residual,
                                    mode_override=mode_override)
-        run = dataclasses.replace(run, unroll=True)
+        run = run.replace(unroll=True)
         costs[u] = _probe_costs(cfg_u, shape, mesh, run, eng,
                                 mode_override=mode_override)
     U = cfg_full.n_units

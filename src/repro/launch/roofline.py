@@ -162,6 +162,22 @@ class Roofline:
         }
 
 
+def normalize_cost_analysis(cost) -> Dict:
+    """``compiled.cost_analysis()`` across jaxlib versions: older releases
+    return a per-partition list of dicts (one entry on a single module),
+    newer ones return the dict directly.  Normalize to one flat dict so
+    every consumer can ``cost.get("flops")`` without version checks."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: Dict = {}
+        for entry in cost:
+            for k, v in dict(entry).items():
+                merged[k] = merged.get(k, 0.0) + v
+        return merged
+    return dict(cost)
+
+
 def model_flops(cfg, shape) -> float:
     """MODEL_FLOPS = 6·N·D for training (fwd+bwd), 2·N·D for inference,
     with N = active params (MoE) and D = tokens processed."""
@@ -179,6 +195,7 @@ def model_flops(cfg, shape) -> float:
 def analyse(arch: str, shape_name: str, mesh_name: str, chips: int,
             cost: Dict, hlo_text: str, mf: float) -> Roofline:
     coll = collective_bytes(hlo_text)
+    cost = normalize_cost_analysis(cost)
     return Roofline(
         arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
         hlo_flops=float(cost.get("flops", 0.0)),

@@ -23,7 +23,6 @@ import jax
 
 from repro.config import RunConfig
 from repro.configs import get_config, get_smoke
-from repro.core import simulate_measure
 from repro.checkpoint.io import load_checkpoint, save_checkpoint
 from repro.train.loop import train
 
@@ -68,10 +67,12 @@ def main():
 
     # report expected staleness for the chosen protocol (clock machinery)
     if run.protocol != "hardsync":
-        meas = simulate_measure(run, steps=200)
+        from repro.experiments import ExperimentSpec
+        from repro.experiments import run as run_experiment
+        meas = run_experiment(ExperimentSpec(run=run, steps=200))
         print(f"protocol={run.protocol} n={run.n_softsync} "
               f"c={run.gradients_per_update} "
-              f"expected<sigma>={meas.clock_log.mean_staleness():.2f} "
+              f"expected<sigma>={meas.staleness['mean']:.2f} "
               f"lr={run.learning_rate():.5f}")
 
     t0 = time.time()

@@ -86,13 +86,13 @@ def test_round_softsync_staleness_differs_from_pipelined_as_documented():
     """DESIGN.md §2: the SPMD round engine has ⟨σ⟩ = (n−1)/2; the pipelined
     simulator has ⟨σ⟩ ≈ n.  Both are staleness-bounded; the LR policy uses
     each engine's own measurement.  Verify the documented relationship."""
-    from repro.core import simulate_measure
+    from repro.core import simulate
     from repro.core.distributed import round_event_lrs
     n, lam = 8, 16
     run = RunConfig(protocol="softsync", n_softsync=n, n_learners=lam,
                     minibatch=4, base_lr=1.0, lr_policy="staleness_inverse",
                     seed=2)
-    sim_sigma = simulate_measure(run, steps=600).clock_log.mean_staleness()
+    sim_sigma = simulate(run, steps=600).clock_log.mean_staleness()
     assert abs(sim_sigma - n) < 0.25 * n + 1          # pipelined: ≈ n
     lrs = round_event_lrs(run, n)
     assert np.allclose(lrs, 1.0 / ((n - 1) / 2))      # round: ⟨σ⟩=(n−1)/2

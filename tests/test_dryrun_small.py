@@ -32,7 +32,7 @@ SCRIPT = textwrap.dedent("""
     with mesh:
         fn, specs = build_lowerable(cfg, shape, mesh, run, engine=eng)
         compiled = fn.lower(*specs).compile()
-        cost = compiled.cost_analysis()
+        cost = rl.normalize_cost_analysis(compiled.cost_analysis())
         coll = rl.collective_bytes(compiled.as_text())
         mem = compiled.memory_analysis()
     print(json.dumps({{

@@ -1,0 +1,329 @@
+"""The experiment surface (DESIGN.md §5): declarative spec → run() →
+RunResult.  Pins the three ISSUE-3 contracts — (a) run(spec) ≡ hand-wired
+schedule+replay bit-for-bit, (b) vmapped batch replay ≡ sequential replay
+across a protocol × seed grid, (c) RunResult JSON round-trip — plus the
+Sweep grid builder, the problem registry, vectorized staging, RunConfig
+.replace validation, and the deprecated core shims."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RunConfig
+from repro.core.engine import replay, replay_batch
+from repro.core.trace import schedule
+from repro.experiments import (ExperimentSpec, RunResult, Sweep,
+                               get_problem, register_problem, run,
+                               run_sweep, updates_for_epochs,
+                               validate_record, validate_results_file)
+from repro.experiments.result import envelope
+
+
+# ---------------------------------------------------------------------------
+# a tiny custom problem: linear regression (registered once per session)
+# ---------------------------------------------------------------------------
+class _LinRegProblem:
+    """Minimal problem-protocol example: no vectorized staging hook, so the
+    driver's per-slot fallback path gets exercised."""
+
+    def __init__(self, n_features=6, n_out=3):
+        key = jax.random.PRNGKey(0)
+        self.w_true = jax.random.normal(key, (n_features, n_out))
+        self.x = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(1), (64, n_features)))
+        self.y = np.asarray(self.x @ self.w_true)
+        self.init = jnp.zeros((n_features, n_out))
+        self.dataset_size = 64
+        self._grad = jax.jit(jax.grad(
+            lambda p, b: jnp.mean((b[0] @ p - b[1]) ** 2)))
+
+    def grad_fn(self, p, batch):
+        return self._grad(p, batch)
+
+    def batch_fn_for(self, mu, seed=0):
+        def fn(learner, step):
+            rng = np.random.default_rng(seed * 77 + learner * 9973 + step)
+            idx = rng.integers(0, 64, size=mu)
+            return self.x[idx], self.y[idx]
+        return fn
+
+    def eval_fn(self, p):
+        return {"mse": float(np.mean((self.x @ np.asarray(p)
+                                      - self.y) ** 2))}
+
+
+register_problem("linreg_test", _LinRegProblem)
+
+
+def _spec(**kw):
+    base = dict(
+        run=RunConfig(protocol="softsync", n_softsync=2, n_learners=8,
+                      minibatch=8, base_lr=0.2,
+                      lr_policy="staleness_inverse", optimizer="momentum",
+                      seed=3),
+        problem="mlp_teacher", steps=40)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# (a) run(spec) ≡ hand-wired schedule + replay, bit-for-bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("optimizer", ["sgd", "momentum"])
+def test_run_equals_handwired_pipeline_bitwise(optimizer):
+    spec = _spec(run=_spec().run.replace(optimizer=optimizer))
+    res = run(spec)
+    prob = get_problem("mlp_teacher")
+    trace = schedule(spec.run, spec.steps)
+    sim = replay(trace, spec.run, grad_fn=prob.grad_fn,
+                 init_params=prob.init,
+                 batch_fn=prob.batch_fn_for(spec.run.minibatch))
+    for k in res.params:
+        np.testing.assert_array_equal(np.asarray(res.params[k]),
+                                      np.asarray(sim.params[k]))
+    assert res.metrics["test_error"] == prob.eval_fn(sim.params)["test_error"]
+    assert res.runtime["simulated_time"] == trace.simulated_time
+    assert res.staleness["ring_buffer_K"] == trace.max_staleness + 1
+
+
+# ---------------------------------------------------------------------------
+# (b) vmapped batch replay ≡ sequential replay over a protocol × seed grid
+# ---------------------------------------------------------------------------
+def test_batched_sweep_equals_sequential_protocol_seed_grid():
+    sweep = Sweep.over(_spec(eval_every=20), cases=[
+        {"protocol": "softsync", "n_softsync": 2,
+         "lr_policy": "staleness_inverse"},
+        {"protocol": "async", "lr_policy": "per_gradient"},
+        {"protocol": "hardsync", "lr_policy": "sqrt_scale"},
+    ], seed=[0, 1, 2])
+    batched = run_sweep(sweep)
+    sequential = run_sweep(sweep, batch=False)
+    assert len(batched) == len(sequential) == 9
+    for b, s in zip(batched, sequential):
+        assert b.tag == s.tag
+        for k in b.params:
+            np.testing.assert_allclose(np.asarray(b.params[k]),
+                                       np.asarray(s.params[k]),
+                                       rtol=0, atol=2e-6)
+        assert b.metrics["test_error"] == pytest.approx(
+            s.metrics["test_error"], abs=1e-6)
+        assert [r["update"] for r in b.curve] == \
+            [r["update"] for r in s.curve]
+        for rb, rs in zip(b.curve, s.curve):
+            assert rb["time"] == pytest.approx(rs["time"])
+            assert rb["test_error"] == pytest.approx(rs["test_error"],
+                                                     abs=1e-6)
+        assert b.staleness == s.staleness
+
+
+def test_batched_sweep_custom_problem_per_slot_fallback():
+    """No stage_minibatches on the problem ⇒ per-slot staging, still one
+    vmapped program, still equivalent."""
+    sweep = Sweep.over(_spec(problem="linreg_test",
+                             run=_spec().run.replace(base_lr=0.05)),
+                       seed=[0, 1], base_lr=[0.02, 0.05])
+    batched = run_sweep(sweep)
+    sequential = run_sweep(sweep, batch=False)
+    for b, s in zip(batched, sequential):
+        np.testing.assert_allclose(np.asarray(b.params),
+                                   np.asarray(s.params), rtol=0, atol=2e-6)
+        assert b.metrics["mse"] == pytest.approx(s.metrics["mse"],
+                                                 rel=1e-6)
+    # it learns, too
+    assert batched[-1].metrics["mse"] < 0.5 * float(
+        np.mean(get_problem("linreg_test").y ** 2))
+
+
+def test_replay_batch_rejects_incompatible_members():
+    prob = get_problem("mlp_teacher")
+    r1 = RunConfig(protocol="softsync", n_softsync=2, n_learners=8,
+                   minibatch=8, optimizer="momentum", seed=0)
+    r2 = r1.replace(n_softsync=8)                       # different c
+    t1, t2 = schedule(r1, 20), schedule(r2, 20)
+    kw = dict(grad_fn=prob.grad_fn, init_params=prob.init,
+              batch_fns=[prob.batch_fn_for(8)] * 2)
+    with pytest.raises(ValueError, match="share trace shape"):
+        replay_batch([t1, t2], [r1, r2], **kw)
+    r3 = r1.replace(optimizer="adamw")
+    with pytest.raises(ValueError, match="optimizer spec|flat lane"):
+        replay_batch([t1, schedule(r3, 20)], [r1, r3], **kw)
+    with pytest.raises(ValueError, match="exactly one"):
+        replay_batch([t1], [r1], grad_fn=prob.grad_fn,
+                     init_params=prob.init)
+
+
+def test_adamw_sweep_falls_back_to_sequential():
+    sweep = Sweep.over(_spec(run=_spec().run.replace(optimizer="adamw",
+                                                     base_lr=0.01),
+                             steps=15), seed=[0, 1])
+    results = run_sweep(sweep)                # must not raise
+    assert all(np.isfinite(r.metrics["test_error"]) for r in results)
+
+
+# ---------------------------------------------------------------------------
+# (c) RunResult JSON round-trip + schema validation
+# ---------------------------------------------------------------------------
+def test_runresult_json_roundtrip():
+    res = run(_spec(steps=10, eval_every=5))
+    rec = res.record()
+    validate_record(rec)
+    again = RunResult.from_json(res.to_json())
+    assert again.record() == rec
+    assert json.loads(res.to_json()) == rec        # record is pure JSON
+    assert again.spec["run"]["protocol"] == "softsync"
+    assert again.spec["steps"] == 10
+
+
+def test_results_file_envelope_validation(tmp_path):
+    res = run(_spec(steps=5))
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(envelope("t", [res], {"claim": True})))
+    assert validate_results_file(str(good)) == 1
+
+    bad = tmp_path / "bad.json"
+    rec = res.record()
+    del rec["staleness"]
+    bad.write_text(json.dumps(envelope("t", [rec])))
+    with pytest.raises(ValueError, match="missing keys"):
+        validate_results_file(str(bad))
+    legacy = tmp_path / "legacy.json"
+    legacy.write_text(json.dumps({"some": "freeform"}))
+    with pytest.raises(ValueError, match="envelope"):
+        validate_results_file(str(legacy))
+
+
+def test_shipped_results_files_validate():
+    results_dir = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "results")
+    files = [f for f in os.listdir(results_dir) if f.endswith(".json")]
+    assert files, "no results files shipped"
+    for f in files:
+        validate_results_file(os.path.join(results_dir, f))
+
+
+# ---------------------------------------------------------------------------
+# measure mode + spec semantics
+# ---------------------------------------------------------------------------
+def test_measure_mode_matches_schedule():
+    cfg = RunConfig(protocol="softsync", n_softsync=4, n_learners=16,
+                    minibatch=16, seed=5)
+    res = run(ExperimentSpec(run=cfg, steps=300))
+    tr = schedule(cfg, 300)
+    log = tr.clock_log()
+    assert res.metrics == {} and res.curve == []
+    assert res.staleness["mean"] == log.mean_staleness()
+    assert res.staleness["ring_buffer_K"] == tr.max_staleness + 1
+    assert res.runtime["simulated_time"] == tr.simulated_time
+    assert res.runtime["minibatches"] == tr.minibatches
+    validate_record(res.record())
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="exactly one of steps"):
+        ExperimentSpec(run=RunConfig(), problem="mlp_teacher")
+    with pytest.raises(ValueError, match="exactly one of steps"):
+        ExperimentSpec(run=RunConfig(), problem="mlp_teacher", steps=5,
+                       epochs=1)
+    with pytest.raises(ValueError, match="engine"):
+        ExperimentSpec(run=RunConfig(), steps=5, engine="warp")
+    with pytest.raises(ValueError, match="measure mode needs explicit"):
+        ExperimentSpec(run=RunConfig(), epochs=2)
+    with pytest.raises(ValueError, match="duration"):
+        ExperimentSpec(run=RunConfig(), steps=5, duration="calibrated:tpu")
+    with pytest.raises(KeyError, match="unknown problem"):
+        ExperimentSpec(run=RunConfig(), problem="nope",
+                       steps=5).resolve_problem()
+
+
+def test_epochs_resolution_matches_updates_for_epochs():
+    spec = _spec(steps=None, epochs=2.0)
+    prob = get_problem("mlp_teacher")
+    want = updates_for_epochs(2.0, spec.run.minibatch,
+                              spec.run.gradients_per_update,
+                              prob.dataset_size)
+    assert spec.resolved_steps() == want
+
+
+# ---------------------------------------------------------------------------
+# Sweep grid builder
+# ---------------------------------------------------------------------------
+def test_sweep_grid_product_order_and_tags():
+    sweep = Sweep.over(_spec(), protocol=["softsync", "async"],
+                       seed=[0, 1])
+    specs = sweep.specs()
+    assert len(sweep) == len(specs) == 4
+    assert [s.tag for s in specs] == [
+        "protocol=softsync/seed=0", "protocol=softsync/seed=1",
+        "protocol=async/seed=0", "protocol=async/seed=1"]
+    assert specs[2].run.protocol == "async" and specs[2].run.seed == 0
+
+
+def test_sweep_axes_split_run_and_spec_fields():
+    sweep = Sweep.over(_spec(), steps=[10, 20], minibatch=[4, 8])
+    for s in sweep:
+        assert s.steps in (10, 20) and s.run.minibatch in (4, 8)
+    with pytest.raises(ValueError, match="unknown axis"):
+        Sweep.over(_spec(), nonsense=[1])
+    with pytest.raises(ValueError, match="empty"):
+        Sweep.over(_spec(), seed=[])
+    with pytest.raises(ValueError, match="unknown sweep field"):
+        Sweep.over(_spec(), cases=[{"wat": 1}]).specs()
+
+
+def test_sweep_cases_tag_override():
+    sweep = Sweep.over(_spec(), cases=[
+        {"protocol": "hardsync", "lr_policy": "sqrt_scale",
+         "tag": "barrier"}])
+    (spec,) = sweep.specs()
+    assert spec.tag == "barrier"
+    assert spec.run.protocol == "hardsync"
+    assert spec.run.lr_policy == "sqrt_scale"
+
+
+# ---------------------------------------------------------------------------
+# satellites: RunConfig.replace, vectorized staging, deprecated shims
+# ---------------------------------------------------------------------------
+def test_runconfig_replace_reruns_validation():
+    cfg = RunConfig(protocol="softsync", n_softsync=4)
+    assert cfg.replace(minibatch=4).minibatch == 4
+    assert cfg.replace(minibatch=4) == dataclasses.replace(cfg, minibatch=4)
+    with pytest.raises(ValueError, match="unknown protocol"):
+        cfg.replace(protocol="gossip")
+    with pytest.raises(ValueError, match="unknown duration_model"):
+        cfg.replace(duration_model="uniform")
+
+
+def test_stage_minibatches_matches_per_slot_batch_fn():
+    prob = get_problem("mlp_teacher")
+    cfg = RunConfig(protocol="softsync", n_softsync=2, n_learners=8,
+                    minibatch=4, seed=2)
+    tr = schedule(cfg, 25)
+    x, y = prob.stage_minibatches(tr.learner, tr.mb_index, 4)
+    fn = prob.batch_fn_for(4)
+    for j in (0, 7, 24):
+        for i in range(tr.c):
+            xs, ys = fn(int(tr.learner[j, i]), int(tr.mb_index[j, i]))
+            np.testing.assert_array_equal(x[j, i], xs)
+            np.testing.assert_array_equal(y[j, i], ys)
+
+
+def test_deprecated_shims_still_work():
+    from repro.core import simulate_compiled, simulate_measure
+    cfg = RunConfig(protocol="softsync", n_softsync=2, n_learners=4,
+                    minibatch=8, seed=1)
+    with pytest.deprecated_call():
+        meas = simulate_measure(cfg, steps=50)
+    tr = schedule(cfg, 50)
+    assert meas.simulated_time == tr.simulated_time
+    prob = get_problem("linreg_test")
+    with pytest.deprecated_call():
+        sim = simulate_compiled(
+            cfg.replace(base_lr=0.05, optimizer="sgd"), steps=20,
+            grad_fn=prob.grad_fn, init_params=prob.init,
+            batch_fn=prob.batch_fn_for(8))
+    assert np.isfinite(np.asarray(sim.params)).all()

@@ -11,7 +11,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import RunConfig
-from repro.core import fused_coefficients, round_event_lrs, simulate_measure
+from repro.core import fused_coefficients, round_event_lrs, simulate
 from repro.core import tradeoff as to
 
 SET = dict(deadline=None, max_examples=20, derandomize=True)
@@ -29,7 +29,7 @@ def test_softsync_staleness_invariants(lam, data):
     # c = ⌊λ/n⌋ rounds: the protocol's EFFECTIVE splitting is n_eff = λ/c
     # (e.g. λ=13, n=7 ⇒ c=1 ⇒ behaves as 13-softsync ≈ async; paper §3.1)
     n_eff = lam / run.gradients_per_update
-    res = simulate_measure(run, steps=400)
+    res = simulate(run, steps=400)
     vals = res.clock_log.all_staleness_values()
     # staleness is nonnegative and hard-bounded with overwhelming probability
     assert vals.min() >= 0
@@ -43,7 +43,7 @@ def test_softsync_staleness_invariants(lam, data):
 @given(st.integers(1, 30))
 def test_hardsync_always_zero_staleness(lam):
     run = RunConfig(protocol="hardsync", n_learners=lam, minibatch=8)
-    res = simulate_measure(run, steps=20)
+    res = simulate(run, steps=20)
     assert res.clock_log.mean_staleness() == 0.0
 
 

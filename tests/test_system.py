@@ -9,7 +9,7 @@ import pytest
 from repro.config import ModelConfig, RunConfig
 from repro.core import (fused_coefficients, hardsync_lr, init_opt_state,
                         make_lr_policy, make_train_step, simulate,
-                        simulate_measure, softsync_lr)
+                        softsync_lr)
 from repro.core.protocols import ParameterServerState, tree_mean
 from repro.train.loop import train
 
@@ -69,7 +69,7 @@ def test_lr_policies():
 def test_softsync_staleness_bounded(n):
     run = RunConfig(protocol="softsync", n_softsync=n, n_learners=30,
                     minibatch=128, seed=3)
-    res = simulate_measure(run, steps=1500)
+    res = simulate(run, steps=1500)
     log = res.clock_log
     assert abs(log.mean_staleness() - n) < max(1.0, 0.25 * n)
     assert log.fraction_exceeding(2 * n) < 1e-3
@@ -77,7 +77,7 @@ def test_softsync_staleness_bounded(n):
 
 def test_hardsync_zero_staleness():
     run = RunConfig(protocol="hardsync", n_learners=10, minibatch=32)
-    res = simulate_measure(run, steps=50)
+    res = simulate(run, steps=50)
     assert res.clock_log.mean_staleness() == 0.0
 
 

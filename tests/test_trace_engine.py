@@ -9,8 +9,8 @@ import numpy as np
 import pytest
 
 from repro.config import RunConfig
-from repro.core import (replay, schedule, simulate, simulate_compiled,
-                        simulate_measure)
+from repro.core import replay, schedule, simulate
+from repro.experiments.driver import execute
 from repro.core.trace import as_learner_sampler, make_duration_sampler
 
 
@@ -56,7 +56,7 @@ def test_replay_equals_legacy_loop(lam, protocol, n, optimizer, lr_policy):
     kw = dict(steps=25, grad_fn=GRAD_FN, init_params=jnp.zeros((6, 3)),
               batch_fn=_batch_fn)
     legacy = simulate(run, **kw)
-    compiled = simulate_compiled(run, **kw)
+    compiled = execute(run, **kw)
     np.testing.assert_allclose(np.asarray(compiled.params),
                                np.asarray(legacy.params),
                                atol=1e-5, rtol=1e-5)
@@ -76,7 +76,7 @@ def test_replay_equals_legacy_scalar_and_per_gradient_history():
     kw = dict(steps=40, grad_fn=GRAD_FN, init_params=jnp.zeros((6, 3)),
               batch_fn=_batch_fn, eval_fn=eval_fn, eval_every=10)
     legacy = simulate(run, **kw)
-    compiled = simulate_compiled(run, **kw)
+    compiled = execute(run, **kw)
     assert len(compiled.history) == len(legacy.history) == 4
     for a, b in zip(compiled.history, legacy.history):
         assert a["update"] == b["update"]
@@ -89,7 +89,7 @@ def test_schedule_matches_measure_mode():
     run = RunConfig(protocol="softsync", n_softsync=4, n_learners=16,
                     minibatch=16, seed=5)
     tr = schedule(run, 300)
-    res = simulate_measure(run, steps=300)
+    res = simulate(run, steps=300)
     np.testing.assert_array_equal(tr.pulled_ts,
                                   _clocks_matrix(res.clock_log))
     assert tr.simulated_time == pytest.approx(res.simulated_time)
@@ -180,18 +180,17 @@ def test_replay_on_prescheduled_trace_with_hw_sampler():
 
 def test_replay_rejects_mismatched_config():
     """A trace is only valid for the RunConfig that scheduled it."""
-    import dataclasses
     run = RunConfig(protocol="softsync", n_softsync=2, n_learners=4,
                     minibatch=8, base_lr=0.05, optimizer="sgd", seed=0)
     tr = schedule(run, 10)
     kw = dict(grad_fn=GRAD_FN, init_params=jnp.zeros((6, 3)),
               batch_fn=_batch_fn)
     with pytest.raises(ValueError):                  # different c/λ
-        replay(tr, dataclasses.replace(run, n_learners=8), **kw)
+        replay(tr, run.replace(n_learners=8), **kw)
     with pytest.raises(ValueError):                  # silent-LR-sweep hazard
-        replay(tr, dataclasses.replace(run, base_lr=0.5), **kw)
+        replay(tr, run.replace(base_lr=0.5), **kw)
     with pytest.raises(ValueError):                  # policy/mode mismatch
-        replay(tr, dataclasses.replace(run, lr_policy="per_gradient"), **kw)
+        replay(tr, run.replace(lr_policy="per_gradient"), **kw)
 
 
 def test_replay_learns_on_mlp_problem():
@@ -199,7 +198,7 @@ def test_replay_learns_on_mlp_problem():
     run = RunConfig(protocol="softsync", n_softsync=4, n_learners=8,
                     minibatch=8, base_lr=0.1, lr_policy="staleness_inverse",
                     optimizer="momentum", seed=4)
-    res = simulate_compiled(run, steps=400, grad_fn=GRAD_FN,
+    res = execute(run, steps=400, grad_fn=GRAD_FN,
                             init_params=jnp.zeros((6, 3)),
                             batch_fn=_batch_fn)
     err = float(jnp.mean((X @ res.params - Y) ** 2))
