@@ -1,0 +1,151 @@
+"""CI perf-trajectory guard: tiny-shape engine + sweep benchmarks vs a
+checked-in floor (``benchmarks/ci_floor.json``).
+
+    PYTHONPATH=src python -m benchmarks.bench_guard
+
+Runs the ``sim_engine_bench`` single-run cell (legacy vs compiled replay)
+and the ``sweep_batched_vs_sequential`` cell on a tiny shape (≲1 min), then
+fails (exit 1) if any guarded metric regresses more than ``tolerance``
+(default 30%) below its floor — the regression gate for the perf the
+compiled engine and the batched sweep driver earned (DESIGN.md §4/§5).
+
+Guarded metrics:
+
+* ``compiled_updates_per_s``  — absolute compiled-replay throughput.  The
+  floor is deliberately far below the dev-machine measurement (CI runners
+  vary ~2-3×); this catches collapse-scale regressions, not noise.
+* ``engine_speedup``          — compiled vs legacy on the same trace.
+  Machine-relative, so the floor can sit much closer to the measurement.
+* ``batched_sweep_speedup``   — one vmapped program vs sequential replays
+  for a shape-compatible grid cell.  Also machine-relative.
+
+Fresh measurements land in ``benchmarks/results/bench_guard.json`` (the CI
+job uploads it as a workflow artifact).  To demonstrate the gate trips:
+
+    PYTHONPATH=src python -m benchmarks.bench_guard --floor-scale 100
+
+multiplies every floor 100× and must exit 1.  ``--write-floor`` rewrites
+the floor file from fresh measurements × per-metric safety margins (for
+maintainers after an intentional perf change).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import emit, save_results
+from benchmarks.sim_engine_bench import _bench_one, _bench_sweep
+from repro.config import RunConfig
+
+FLOOR_PATH = os.path.join(os.path.dirname(__file__), "ci_floor.json")
+
+# floor = measured × margin when --write-floor regenerates the file.
+# Absolute throughput gets a wide margin (unknown CI hardware); ratios are
+# machine-relative and stay tight.
+FLOOR_MARGINS = {
+    "compiled_updates_per_s": 0.25,
+    "engine_speedup": 0.55,
+    "batched_sweep_speedup": 0.55,
+}
+
+
+def measure() -> dict:
+    """The tiny-shape measurement cell (~1 min on a CI runner)."""
+    cfg = RunConfig(protocol="softsync", n_softsync=1, n_learners=16,
+                    minibatch=4, base_lr=0.05,
+                    lr_policy="staleness_inverse", optimizer="momentum",
+                    seed=17)
+    row = _bench_one(cfg, updates=48, repeats=3)
+    sweep = _bench_sweep(updates=30, lam=16, seeds=3, repeats=3)
+    return {
+        "metrics": {
+            "compiled_updates_per_s": row["compiled_updates_per_s"],
+            "engine_speedup": row["speedup"],
+            "batched_sweep_speedup": sweep["speedup"],
+        },
+        "engine_cell": row,
+        "sweep_cell": sweep,
+    }
+
+
+def check(metrics: dict, floor: dict, floor_scale: float = 1.0) -> list:
+    """Each guarded metric vs floor·scale·(1 − tolerance); returns rows."""
+    tol = float(floor.get("tolerance", 0.30))
+    rows = []
+    for name, value in metrics.items():
+        bound = floor["floors"][name] * floor_scale * (1.0 - tol)
+        rows.append({"metric": name, "measured": value,
+                     "floor": floor["floors"][name] * floor_scale,
+                     "min_allowed": bound, "ok": value >= bound})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--floor", default=FLOOR_PATH,
+                    help="floor file (default benchmarks/ci_floor.json)")
+    ap.add_argument("--floor-scale", type=float, default=1.0,
+                    help="multiply floors (e.g. 100 to prove the gate "
+                         "trips; see module docstring)")
+    ap.add_argument("--write-floor", action="store_true",
+                    help="rewrite the floor file from fresh measurements "
+                         "x safety margins")
+    args = ap.parse_args(argv)
+
+    measured = measure()
+    metrics = measured["metrics"]
+    for name, value in metrics.items():
+        emit(f"bench_guard/{name}", f"{value:.2f}")
+
+    if args.write_floor:
+        floor = {
+            "tolerance": 0.30,
+            "floors": {k: round(v * FLOOR_MARGINS[k], 3)
+                       for k, v in metrics.items()},
+            "note": "bench-guard floors: fail if a metric drops >30% below "
+                    "its floor. Absolute throughput floors carry a wide "
+                    "margin vs the dev-machine measurement (CI hardware "
+                    "varies); speedup ratios are machine-relative. "
+                    "Regenerate: python -m benchmarks.bench_guard "
+                    "--write-floor",
+        }
+        with open(args.floor, "w") as f:
+            json.dump(floor, f, indent=1)
+            f.write("\n")
+        print(f"[bench-guard] wrote floors to {args.floor}")
+
+    with open(args.floor) as f:
+        floor = json.load(f)
+    rows = check(metrics, floor, args.floor_scale)
+    save_results("bench_guard", derived={
+        "measured": measured, "floor": floor,
+        "floor_scale": args.floor_scale, "checks": rows})
+
+    failed = [r for r in rows if not r["ok"]]
+    for r in rows:
+        status = "ok" if r["ok"] else "REGRESSED"
+        print(f"[bench-guard] {r['metric']}: measured={r['measured']:.2f} "
+              f"min_allowed={r['min_allowed']:.2f} -> {status}")
+    if failed:
+        print(f"[bench-guard] FAIL: {len(failed)} metric(s) below the "
+              f"floor - see benchmarks/results/bench_guard.json",
+              file=sys.stderr)
+        return 1
+    print("[bench-guard] all perf floors hold")
+    return 0
+
+
+def run() -> int:
+    """benchmarks.run entry point (no argv: never inherit the driver's).
+    Raises on a floor trip so the driver cannot swallow the gate."""
+    rc = main([])
+    if rc:
+        raise SystemExit(rc)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -112,6 +112,21 @@ def run(epochs: int = 10) -> dict:
     err_star = t4[3]["test_error"]
     emit("table4/hardsync_best_error", err_hard <= err_star + 0.05,
          f"{err_hard:.3f} vs adv*:{err_star:.3f}")
+    # ---- topology scaling curves (if topology_scaling has run) -------------
+    topo = os.path.join(RESULTS_DIR, "topology_scaling.json")
+    if os.path.exists(topo):
+        with open(topo) as f:
+            derived = json.load(f).get("derived", {})
+        out["topology_scaling"] = derived
+        for arch, curve in sorted(derived.get("train_seconds", {}).items()):
+            span = {int(k): v for k, v in curve.items()}
+            lam0, lam1 = min(span), max(span)
+            emit(f"summary/topology/{arch}",
+                 f"train[{lam0}]={span[lam0]:.0f}s "
+                 f"train[{lam1}]={span[lam1]:.0f}s",
+                 f"speedup={span[lam0] / span[lam1]:.1f}x over "
+                 f"{lam1 // lam0}x learners")
+
     # ---- simulator engine throughput (if sim_engine_bench has run) ---------
     bench = os.path.join(RESULTS_DIR, "sim_engine_bench.json")
     if os.path.exists(bench):

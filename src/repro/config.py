@@ -287,6 +287,17 @@ class RunConfig:
     slow_factor: float = 4.0              # two_speed: slowdown multiplier
     pareto_alpha: float = 2.5             # pareto: tail index (smaller=heavier)
     pareto_scale: float = 0.5             # pareto: straggler magnitude
+    # --- PS topology (Rudra-base / adv / adv*; core/topology.py) ------------
+    # shards: S parameter-server shards over the flat weight buffer (1 = the
+    # flat Rudra-base server).  groups: G learner groups with group-level
+    # gradient aggregation (0 = ungrouped — each learner pushes directly;
+    # must divide λ otherwise).  shard_pull_jitter: per-(pull, shard)
+    # completion skew in simulated seconds — updates landing between the
+    # logical pull and a shard's completion are visible in that shard's
+    # slice (shard-local staleness; 0 = consistent snapshot reads).
+    shards: int = 1
+    groups: int = 0
+    shard_pull_jitter: float = 0.0
     # --- distributed runtime ------------------------------------------------
     num_microbatches: int = 1
     remat: bool = True
@@ -314,6 +325,16 @@ class RunConfig:
             raise ValueError(f"unknown lr_policy {self.lr_policy!r}")
         if self.duration_model not in DURATION_MODELS:
             raise ValueError(f"unknown duration_model {self.duration_model!r}")
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.groups < 0:
+            raise ValueError(f"groups must be >= 0, got {self.groups}")
+        if self.groups and self.n_learners % self.groups != 0:
+            raise ValueError(f"groups={self.groups} must divide "
+                             f"n_learners={self.n_learners}")
+        if self.shard_pull_jitter < 0:
+            raise ValueError(f"shard_pull_jitter must be >= 0, "
+                             f"got {self.shard_pull_jitter}")
 
     def replace(self, **kw) -> "RunConfig":
         """A copy with ``kw`` fields changed — ``dataclasses.replace`` with
@@ -322,13 +343,26 @@ class RunConfig:
         return dataclasses.replace(self, **kw)
 
     @property
+    def n_pushers(self) -> int:
+        """Entities pushing gradients at the PS: with learner groups the
+        group is the pusher (one aggregated gradient per group round),
+        otherwise every learner pushes directly."""
+        return self.groups if self.groups else self.n_learners
+
+    @property
+    def group_size(self) -> int:
+        """Learners aggregated per push (1 ⇔ no effective grouping)."""
+        return self.n_learners // self.n_pushers
+
+    @property
     def gradients_per_update(self) -> int:
-        """c = ⌊λ/n⌋ (Eq. 5).  hardsync: exactly λ."""
+        """c = ⌊P/n⌋ (Eq. 5 over the P pushing entities; P = λ ungrouped).
+        hardsync: exactly P."""
         if self.protocol == "hardsync":
-            return self.n_learners
+            return self.n_pushers
         if self.protocol == "async":
             return 1
-        return max(1, self.n_learners // self.n_softsync)
+        return max(1, self.n_pushers // self.n_softsync)
 
     @property
     def expected_staleness(self) -> float:
@@ -336,7 +370,7 @@ class RunConfig:
         if self.protocol == "hardsync":
             return 0.0
         if self.protocol == "async":
-            return float(self.n_learners)
+            return float(self.n_pushers)
         return float(self.n_softsync)
 
     def learning_rate(self, measured_staleness: Optional[float] = None) -> float:
@@ -354,7 +388,7 @@ class RunConfig:
 def validate_pairing(model: ModelConfig, shape: InputShape) -> Optional[str]:
     """Return a skip-reason string if (model, shape) must be skipped, else None.
 
-    Skips mirror DESIGN.md §6: encoder-only models have no decode step;
+    Skips mirror DESIGN.md §7: encoder-only models have no decode step;
     full-attention models need a sliding-window variant for long_500k (all of
     ours implement it, so only encoder-only skips remain).
     """

@@ -6,6 +6,7 @@ from repro.core.protocols import (ParameterServerState, init_ps_state,
                                   tree_mean)
 from repro.core.lr_policies import (make_lr_policy, hardsync_lr, softsync_lr,
                                     resolve_trace_lrs)
+from repro.core.topology import RUDRA_ARCHS, Topology
 from repro.core.trace import (ArrivalTrace, make_duration_sampler, schedule)
 from repro.core.simulator import simulate, simulate_measure, SimResult
 from repro.core.engine import replay, replay_batch, simulate_compiled
@@ -17,6 +18,7 @@ __all__ = [
     "StalenessRecord", "VectorClockLog", "ParameterServerState",
     "init_ps_state", "tree_mean",
     "make_lr_policy", "hardsync_lr", "softsync_lr", "resolve_trace_lrs",
+    "RUDRA_ARCHS", "Topology",
     "ArrivalTrace", "make_duration_sampler", "schedule",
     "simulate", "simulate_measure", "SimResult",
     "replay", "replay_batch", "simulate_compiled",

@@ -41,6 +41,7 @@ from repro.config import RunConfig
 from repro.core.lr_policies import resolve_trace_lrs
 from repro.core.protocols import init_ps_state
 from repro.core.simulator import SimResult
+from repro.core.topology import Topology
 from repro.core.trace import ArrivalTrace, schedule
 from repro.optim import flatten
 
@@ -58,7 +59,8 @@ def _unstack_tree(tree, c: int):
 
 @functools.lru_cache(maxsize=32)
 def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
-                  layout: flatten.TreeLayout, batched: bool = False):
+                  layout: flatten.TreeLayout, batched: bool = False,
+                  shards: int = 1, group_size: int = 1):
     """The jitted scan over update events — cached per static config so
     repeated replays (benchmark/sweep loops) reuse the compiled program;
     the LRU bound keeps long-lived processes from pinning every grad_fn
@@ -71,26 +73,65 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
     is the jnp twin of the Pallas ``ps_update`` tile.  adamw (scalar step
     counter, no kernel path) falls back to the pytree apply.
 
+    Topology (DESIGN.md §6) — the trivial (1, 1) case compiles the exact
+    pre-topology body:
+
+    * ``shards`` = S > 1: the carry ring becomes S per-shard (K, Dp) rings
+      stacked as (S, K, Dp); each event gathers every slot's weight vector
+      from per-shard rows (``x["ts"]`` is (c, S) — inconsistent reads) and
+      applies the fused event per shard slice via the vmapped
+      ``optim.apply_event_sharded``.
+    * ``group_size`` = gs > 1: each slot aggregates gs member gradients
+      computed against the slot's pulled weights (the group pulls once and
+      broadcasts); minibatches carry a (c, gs, …) leading shape and the
+      member gradients are averaged before the apply.
+
     ``batched=True`` returns ``jit(vmap(scan))``: the identical per-event
     body mapped over a leading batch axis of B independent grid points —
     one device program executes a whole multi-seed/multi-config sweep cell
-    (``replay_batch``).  The ring-buffer *write* position (and the previous
-    snapshot's row) depend only on the step index and the shared K, so
-    ``prev``/``slot`` stay unbatched (``in_axes=None``): the per-event ring
-    update remains a dynamic-update-slice at a common row instead of a
-    per-lane scatter — the difference between the batched scan keeping the
-    (B, K, D) ring in place and copying it every event.  Only ``ts`` (which
-    snapshots each lane's c gradients read), ``lrs``, and the minibatches
-    are per-lane.
+    (``replay_batch``, trivial topology only).  The ring-buffer *write*
+    position (and the previous snapshot's row) depend only on the step
+    index and the shared K, so ``prev``/``slot`` stay unbatched
+    (``in_axes=None``): the per-event ring update remains a
+    dynamic-update-slice at a common row instead of a per-lane scatter —
+    the difference between the batched scan keeping the (B, K, D) ring in
+    place and copying it every event.  Only ``ts`` (which snapshots each
+    lane's c gradients read), ``lrs``, and the minibatches are per-lane.
     """
     coef = jnp.full((c,), 1.0 / c, jnp.float32)
+    D = layout.total
+    Dp = -(-D // shards)                  # Topology.padded_width(D)
+
+    def slot_weights(ring, x):
+        """The (c, D) weight vectors the slots' gradients are computed
+        against: one ring gather, or the per-shard assembly (each slot
+        concatenates its S pulled slices — possibly different timestamps:
+        weights that never existed as one consistent version, §3.1)."""
+        if shards == 1:
+            return ring[x["ts"]]      # (c, D) gather; ts pre-wrapped mod K
+        # ring: (S, K, Dp); x["ts"]: (c, S) → per-shard (S, c, Dp) gather
+        parts = jax.vmap(lambda r, t: r[t], in_axes=(0, 1))(ring, x["ts"])
+        return flatten.shard_unpack(jnp.moveaxis(parts, 0, 1), D)
 
     def gradients(ring, x):
-        rows = ring[x["ts"]]          # (c, D) gather; ts pre-wrapped mod K
-        pulled = flatten.batched_flat_to_tree(rows, layout)
-        return jax.vmap(grad_fn)(pulled, x["batch"])
+        pulled = flatten.batched_flat_to_tree(slot_weights(ring, x), layout)
+        if group_size == 1:
+            return jax.vmap(grad_fn)(pulled, x["batch"])
+        # member gradients share the slot's pulled weights; average the
+        # (c, gs) gradient stack over the group axis (Eq. 3 locally)
+        g = jax.vmap(lambda p, b: jax.vmap(lambda bb: grad_fn(p, bb))(b))(
+            pulled, x["batch"])
+        return jax.tree.map(lambda a: a.astype(jnp.float32).mean(axis=1), g)
 
-    if spec.kernel_supported:
+    if spec.kernel_supported and shards > 1:
+        def event(carry, x):
+            ring, s = carry
+            g = flatten.batched_tree_to_flat(gradients(ring, x))
+            gp = flatten.shard_pack_grads(g, shards, Dp)     # (S, c, Dp)
+            w, s = optim.apply_event_sharded(
+                spec, ring[:, x["prev"]], s, gp, coef, x["lrs"], mode)
+            return (ring.at[:, x["slot"]].set(w), s), None
+    elif spec.kernel_supported:
         def event(carry, x):
             ring, s = carry
             g = flatten.batched_tree_to_flat(gradients(ring, x))
@@ -121,13 +162,24 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
 
 def _materialize_batches(trace: ArrivalTrace, batch_fn: Callable):
     """Evaluate ``batch_fn(learner, minibatch_idx)`` for every trace slot
-    and stack into a pytree with leading (steps, c) axes.  Stacking happens
-    host-side so the whole trace's data moves to device in ONE transfer per
-    leaf (batch_fns returning numpy avoid per-minibatch device_puts)."""
+    and stack into a pytree with leading (steps, c) axes — (steps, c, gs)
+    with learner groups: slot (j, i) aggregates the gs member minibatches
+    ``batch_fn(member, push_counter)``.  Stacking happens host-side so the
+    whole trace's data moves to device in ONE transfer per leaf (batch_fns
+    returning numpy avoid per-minibatch device_puts)."""
+    members = trace.member_learners()          # None when ungrouped
     rows = []
     for j in range(trace.steps):
-        slots = [batch_fn(int(trace.learner[j, i]), int(trace.mb_index[j, i]))
-                 for i in range(trace.c)]
+        if members is None:
+            slots = [batch_fn(int(trace.learner[j, i]),
+                              int(trace.mb_index[j, i]))
+                     for i in range(trace.c)]
+        else:
+            slots = [jax.tree.map(
+                lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                *[batch_fn(int(m), int(trace.mb_index[j, i]))
+                  for m in members[j, i]])
+                for i in range(trace.c)]
         rows.append(jax.tree.map(
             lambda *xs: np.stack([np.asarray(x) for x in xs]), *slots))
     return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *rows)
@@ -142,6 +194,11 @@ def _check_trace(trace: ArrivalTrace, run: RunConfig) -> None:
             f"trace ({trace.protocol}, λ={trace.n_learners}, c={trace.c}) "
             f"was not scheduled from this RunConfig ({run.protocol}, "
             f"λ={run.n_learners}, c={run.gradients_per_update})")
+    topo = Topology.from_run(run)
+    if trace.topology != topo:
+        raise ValueError(
+            f"trace topology ({trace.topology}) disagrees with this "
+            f"RunConfig's ({topo}) — reschedule the trace for this config")
     # the trace bakes policy-resolved LRs in; re-resolving from this run's
     # policy must reproduce them, or the caller is silently sweeping
     # base_lr/lr_policy on a stale trace
@@ -158,15 +215,18 @@ def _trace_xs(trace: ArrivalTrace, K: int, batch_fn: Optional[Callable],
     """The scan inputs of one trace: ring indices (pre-wrapped mod K),
     per-event LRs, and the whole trace's minibatches — materialized per
     slot via ``batch_fn``, or taken pre-staged from ``batches`` (a pytree
-    with leading (steps, c) axes, e.g. a problem's vectorized
-    ``stage_minibatches`` output)."""
+    with leading (steps, c) axes — (steps, c, gs) with learner groups —
+    e.g. a problem's vectorized ``stage_minibatches`` output).  With S > 1
+    PS shards ``ts`` carries the (steps, c, S) per-shard pulled rows."""
     steps_idx = np.arange(trace.steps)
     if batches is None:
         batches = _materialize_batches(trace, batch_fn)
     else:
         batches = jax.tree.map(jnp.asarray, batches)
+    ts = (trace.pulled_ts if trace.shard_pulled_ts is None
+          else trace.shard_pulled_ts)
     return {
-        "ts": jnp.asarray(trace.pulled_ts % K, jnp.int32),
+        "ts": jnp.asarray(ts % K, jnp.int32),
         "prev": jnp.asarray(steps_idx % K, jnp.int32),
         "slot": jnp.asarray((steps_idx + 1) % K, jnp.int32),
         "lrs": jnp.asarray(trace.lrs, jnp.float32),
@@ -195,22 +255,42 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
     _check_trace(trace, run)
     steps, c = trace.steps, trace.c
     K = trace.max_staleness + 1
+    topo = trace.topology
+    S, gs = topo.shards, trace.group_size
     spec, opt_state = init_ps_state(run, init_params)
     layout = flatten.layout_of(init_params)
+    if S > 1 and not spec.kernel_supported:
+        raise ValueError(
+            f"{spec.optimizer!r} has no flat event path, so no sharded "
+            f"replay (shards={S}); use a kernel-supported optimizer")
 
-    scan_fn = _make_scan_fn(grad_fn, spec, trace.mode, c, K, layout)
+    scan_fn = _make_scan_fn(grad_fn, spec, trace.mode, c, K, layout,
+                            shards=S, group_size=gs)
 
     xs = _trace_xs(trace, K, batch_fn)
     flat0 = flatten.tree_to_flat(init_params)
-    ring = jnp.broadcast_to(flat0, (K, flat0.shape[0]))
+    D = flat0.shape[0]
+    Dp = topo.padded_width(D)
+    if S > 1:
+        # per-shard rings: (S, K, Dp), row r of shard s = snapshot ts=r of
+        # the shard's slice (the σ_s ≤ σ invariant keeps K a valid bound)
+        ring = jnp.broadcast_to(
+            flatten.shard_pack(flat0, S, Dp)[:, None, :], (S, K, Dp))
+    else:
+        ring = jnp.broadcast_to(flat0, (K, D))
     if spec.kernel_supported:
-        # flat-domain carry: ring + the single (D,) state vector (or None)
-        s0 = (flatten.tree_to_flat(opt_state[spec.state_keys[0]])
-              if spec.state_keys else None)
+        # flat-domain carry: ring + the (D,)/(S, Dp) state vector (or None)
+        s0 = None
+        if spec.state_keys:
+            s0 = flatten.tree_to_flat(opt_state[spec.state_keys[0]])
+            if S > 1:
+                s0 = flatten.shard_pack(s0, S, Dp)
         carry = (ring, s0)
 
         def params_of(carry, done):
-            return _unflatten_jit(layout)(carry[0][done % K])
+            row = (carry[0][done % K] if S == 1
+                   else flatten.shard_unpack(carry[0][:, done % K], D))
+            return _unflatten_jit(layout)(row)
     else:
         carry = (ring, (init_params, opt_state))
 
@@ -265,7 +345,8 @@ def replay_batch(traces: Sequence[ArrivalTrace],
     drift in EXPERIMENTS.md §Sim).
     Restrictions (the driver falls back to sequential replays otherwise):
     kernel-supported optimizers only (sgd / momentum / adagrad — adamw's
-    pytree carry has no flat lane layout), one shared ``grad_fn`` and
+    pytree carry has no flat lane layout), trivial (Rudra-base) topology
+    only (sharded/grouped traces replay per-spec), one shared ``grad_fn`` and
     ``init_params`` (same problem), per-lane ``batch_fns`` — or per-lane
     pre-staged ``batches`` (leading (steps, c) axes; a problem's vectorized
     ``stage_minibatches``), which skips the per-slot staging loop entirely.
@@ -296,6 +377,12 @@ def replay_batch(traces: Sequence[ArrivalTrace],
     if not spec.kernel_supported:
         raise ValueError(f"{spec.optimizer!r} has no flat lane layout; "
                          f"replay each trace sequentially")
+    for trace, run in zip(traces, runs):
+        if not trace.topology.is_trivial(run.n_learners):
+            raise ValueError(
+                f"batched replay supports the trivial (Rudra-base) "
+                f"topology only; got {trace.topology} — replay "
+                f"sharded/grouped traces sequentially")
     K = max(trace.max_staleness for trace in traces) + 1
     layout = flatten.layout_of(init_params)
     scan_fn = _make_scan_fn(grad_fn, spec, mode, c, K, layout, batched=True)

@@ -78,7 +78,18 @@ class ParameterServerState:
                  ) -> "ParameterServerState":
         """Build the host PS for a RunConfig — the spec comes from the same
         ``spec_from_run`` mapping the compiled replay engine uses
-        (:func:`init_ps_state`), so the two stay field-for-field aligned."""
+        (:func:`init_ps_state`), so the two stay field-for-field aligned.
+
+        The host PS models the *flat* Rudra-base server only; sharded /
+        grouped topologies (DESIGN.md §6) have no per-arrival oracle and
+        replay exclusively on ``core.engine``."""
+        from repro.core.topology import Topology   # lazy: keeps layering flat
+        topo = Topology.from_run(run)
+        if not topo.is_trivial(run.n_learners):
+            raise ValueError(
+                f"the host PS (legacy per-arrival loop) models the flat "
+                f"Rudra-base server; topology {topo} replays on "
+                f"core.engine only")
         return cls(params, run.gradients_per_update, backend=backend,
                    spec=optim.spec_from_run(run))
 

@@ -38,6 +38,7 @@ import numpy as np
 from repro.config import DURATION_MODELS, RunConfig
 from repro.core.clock import VectorClockLog, staleness_matrix
 from repro.core.lr_policies import resolve_trace_lrs
+from repro.core.topology import Topology
 
 
 # ---------------------------------------------------------------------------
@@ -100,16 +101,29 @@ class ArrivalTrace:
 
     Row j describes update event j (PS timestamp j → j+1): slot i of the row
     is the i-th gradient folded into that update, in arrival order.
+
+    With a non-trivial :class:`~repro.core.topology.Topology` the slot
+    granularity is the *pusher* (a learner group): ``learner`` holds pusher
+    ids, ``mb_index`` the pusher's push counter, and each slot stands for
+    ``group_size`` member gradients aggregated locally (member learner ids
+    come from ``member_learners``).  With S > 1 PS shards,
+    ``shard_pulled_ts`` records the per-shard timestamps of the slices the
+    pusher assembled its weights from (inconsistent reads; see topology.py).
     """
 
     protocol: str
     n_learners: int
-    learner: np.ndarray       # (steps, c) int32 — learner that pushed slot i
+    learner: np.ndarray       # (steps, c) int32 — pusher that filled slot i
     pulled_ts: np.ndarray     # (steps, c) int32 — timestamp of pulled weights
-    mb_index: np.ndarray      # (steps, c) int32 — learner's minibatch counter
+    mb_index: np.ndarray      # (steps, c) int32 — pusher's push counter
     event_time: np.ndarray    # (steps,) float64 — simulated clock at fire
     lrs: np.ndarray           # (steps, c) — policy-resolved LRs
     mode: str                 # "combine" | "sequential" (repro.optim modes)
+    topology: Topology = Topology()
+    # (steps, c, S) int32 per-shard pulled timestamps, None when S == 1.
+    # Invariant: pulled_ts[j, i] <= shard_pulled_ts[j, i, s] <= j (a shard
+    # slice is never staler than the logical pull, never from the future).
+    shard_pulled_ts: Optional[np.ndarray] = None
 
     @property
     def steps(self) -> int:
@@ -117,13 +131,37 @@ class ArrivalTrace:
 
     @property
     def c(self) -> int:
-        """Gradients per update (Eq. 5's c; λ for hardsync)."""
+        """Gradients per update (Eq. 5's c; P for hardsync)."""
         return int(self.pulled_ts.shape[1])
 
     @property
+    def group_size(self) -> int:
+        """Learner gradients aggregated into one slot (1 = ungrouped)."""
+        return self.topology.group_size(self.n_learners)
+
+    @property
     def minibatches(self) -> int:
-        """Arrivals consumed by the trace (the PS fires every c-th one)."""
-        return self.steps * self.c
+        """Minibatch gradients consumed by the trace (each of the steps·c
+        slots aggregates group_size member gradients)."""
+        return self.steps * self.c * self.group_size
+
+    def member_learners(self) -> Optional[np.ndarray]:
+        """(steps, c, gs) int32 member learner ids behind each slot, or
+        None when ungrouped (the slot's ``learner`` IS the member)."""
+        if self.group_size == 1:
+            return None
+        return self.topology.members(self.n_learners)[self.learner]
+
+    @property
+    def shard_staleness(self) -> np.ndarray:
+        """(steps, c, S) per-shard σ matrix (σ_s ≤ σ: later-completing
+        shard pulls see fresher slices).  S = 1 ⇒ the slot σ matrix with a
+        trailing singleton axis."""
+        if self.shard_pulled_ts is None:
+            return self.staleness[:, :, None]
+        steps = self.shard_pulled_ts.shape[0]
+        return (np.arange(steps, dtype=np.int64)[:, None, None]
+                - self.shard_pulled_ts.astype(np.int64))
 
     @property
     def staleness(self) -> np.ndarray:
@@ -150,46 +188,103 @@ class ArrivalTrace:
 # ---------------------------------------------------------------------------
 # the schedule pass
 # ---------------------------------------------------------------------------
+# rng stream tag for shard-pull skew draws: shard jitter must never perturb
+# the main arrival stream (S = 1 and S > 1 schedule identical arrivals)
+_SHARD_RNG_TAG = 0x7073
+
+
+def _shard_pulled_ts(topo: Topology, run: RunConfig, pull_time: np.ndarray,
+                     pulled: np.ndarray, times: np.ndarray) -> np.ndarray:
+    """Resolve the (steps, c, S) per-shard pulled timestamps.
+
+    A pull initiated at ``pull_time[j, i]`` completes at shard ``s`` a skew
+    δ ~ Exp(pull_jitter) seconds later (independent rng stream — the main
+    arrival schedule is untouched); every update fired by then is visible
+    in that shard's slice.  Clipped to [pulled_ts, j]: reads are monotone
+    w.r.t. the logical pull and never see the future relative to the update
+    the gradient folds into.  pull_jitter = 0 ⇒ exactly the broadcast slot
+    timestamps (consistent snapshot reads) — returned directly, without the
+    clock comparison: with deterministic duration samplers an update can
+    fire at the *same instant* as a pull, and counting updates with
+    time ≤ pull would spuriously show it to the shard.
+    """
+    steps, c = pulled.shape
+    if topo.pull_jitter <= 0:
+        return np.broadcast_to(pulled[:, :, None],
+                               (steps, c, topo.shards)).astype(np.int32)
+    jrng = np.random.default_rng([run.seed, _SHARD_RNG_TAG])
+    view = (pull_time[:, :, None].astype(np.float64)
+            + topo.pull_jitter * jrng.exponential(
+                size=(steps, c, topo.shards)))
+    seen = np.searchsorted(times, view.reshape(-1),
+                           side="right").reshape(view.shape)
+    lo = pulled[:, :, None].astype(np.int64)
+    hi = np.arange(steps, dtype=np.int64)[:, None, None]
+    return np.clip(seen, lo, hi).astype(np.int32)
+
+
 def schedule(run: RunConfig, steps: int,
              duration_sampler: Optional[Callable] = None) -> ArrivalTrace:
     """Run the gradient-free event queue for ``steps`` updates.
 
     Identical arrival semantics (and rng draw order) to the legacy
-    per-arrival loop; the only output is the trace.
+    per-arrival loop; the only output is the trace.  With learner groups
+    the pushing entities are the P groups — a group push draws its gs
+    member durations in member order and completes at their max (the local
+    aggregation barrier) — which for group_size = 1 reduces draw-for-draw
+    to the ungrouped loop.  PS shards never change the arrival schedule;
+    they only add the per-shard pulled-timestamp resolution
+    (:func:`_shard_pulled_ts`).
     """
     lam = run.n_learners
+    topo = Topology.from_run(run)
+    members = topo.members(lam)            # (P, gs) learner ids
+    pushers, gs = members.shape
     rng = np.random.default_rng(run.seed)
     sampler = as_learner_sampler(duration_sampler or
                                  make_duration_sampler(run))
     mu = run.minibatch
 
+    def push_duration(p: int) -> float:
+        # group-local barrier: gs member gradients, max of their durations
+        # (gs = 1 ⇒ one draw, the legacy per-learner schedule)
+        return max(sampler(rng, mu, int(m)) for m in members[p])
+
     if run.protocol == "hardsync":
-        # barrier rounds: every learner contributes its step-th minibatch
+        # barrier rounds: every pusher contributes its step-th aggregate
         # computed on the round-start weights (timestamp = step).
         times = np.zeros((steps,))
         t = 0.0
         for step in range(steps):
-            t += max(sampler(rng, mu, l) for l in range(lam))
+            t += max(push_duration(p) for p in range(pushers))
             times[step] = t
         rows = np.arange(steps, dtype=np.int32)[:, None]
-        learner = np.broadcast_to(np.arange(lam, dtype=np.int32),
-                                  (steps, lam)).copy()
-        pulled = np.broadcast_to(rows, (steps, lam)).copy()
+        learner = np.broadcast_to(np.arange(pushers, dtype=np.int32),
+                                  (steps, pushers)).copy()
+        pulled = np.broadcast_to(rows, (steps, pushers)).copy()
         mb_idx = pulled.copy()
         lrs, mode = resolve_trace_lrs(run, pulled)
+        shard_ts = None
+        if topo.shards > 1:
+            # the barrier implies consistent pulls: every shard slice is
+            # the round-start snapshot
+            shard_ts = np.broadcast_to(
+                pulled[:, :, None], pulled.shape + (topo.shards,)).copy()
         return ArrivalTrace(run.protocol, lam, learner, pulled, mb_idx,
-                            times, lrs, mode)
+                            times, lrs, mode, topo, shard_ts)
 
     # ------------- softsync / async: the priority queue ---------------------
     c = run.gradients_per_update
     heap = []
-    for i in range(lam):
-        heapq.heappush(heap, (sampler(rng, mu, i), i, i))
-    pulled_ts = [0] * lam
-    mb_done = [0] * lam
+    for i in range(pushers):
+        heapq.heappush(heap, (push_duration(i), i, i))
+    pulled_ts = [0] * pushers
+    pull_t = [0.0] * pushers               # when the pusher last pulled
+    mb_done = [0] * pushers
     learner = np.zeros((steps, c), np.int32)
     pulled = np.zeros((steps, c), np.int32)
     mb_idx = np.zeros((steps, c), np.int32)
+    pull_time = np.zeros((steps, c))
     times = np.zeros((steps,))
     timestamp = 0
     slot = 0
@@ -199,6 +294,7 @@ def schedule(run: RunConfig, steps: int,
         mb += 1
         learner[timestamp, slot] = li
         pulled[timestamp, slot] = pulled_ts[li]
+        pull_time[timestamp, slot] = pull_t[li]
         mb_idx[timestamp, slot] = mb_done[li]
         mb_done[li] += 1
         slot += 1
@@ -208,7 +304,11 @@ def schedule(run: RunConfig, steps: int,
             slot = 0
         # pullWeights: pick up the current timestamp
         pulled_ts[li] = timestamp
-        heapq.heappush(heap, (t + sampler(rng, mu, li), mb + lam, li))
+        pull_t[li] = t
+        heapq.heappush(heap, (t + push_duration(li), mb + pushers, li))
     lrs, mode = resolve_trace_lrs(run, pulled)
+    shard_ts = None
+    if topo.shards > 1:
+        shard_ts = _shard_pulled_ts(topo, run, pull_time, pulled, times)
     return ArrivalTrace(run.protocol, lam, learner, pulled, mb_idx,
-                        times, lrs, mode)
+                        times, lrs, mode, topo, shard_ts)

@@ -23,6 +23,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
+import numpy as np
+
 from repro.config import RunConfig
 from repro.core.engine import replay, replay_batch
 from repro.core.simulator import SimResult, simulate
@@ -128,21 +130,31 @@ class _Job:
         """The whole trace's minibatches via the problem's vectorized
         staging hook (None if the problem only offers per-slot batch_fn) —
         one hash/gather pass instead of a steps×c Python loop, feeding the
-        batched replay's stacked (B, steps, c, …) inputs."""
+        batched replay's stacked (B, steps, c, …) inputs.  With learner
+        groups the slot counters expand to the (steps, c, gs) member
+        matrices (every member of a slot shares its push counter)."""
         stage = getattr(self.problem, "stage_minibatches", None)
         if stage is None:
             return None
-        return stage(self.trace.learner, self.trace.mb_index,
-                     self.spec.run.minibatch)
+        members = self.trace.member_learners()
+        if members is None:
+            return stage(self.trace.learner, self.trace.mb_index,
+                         self.spec.run.minibatch)
+        mb = np.broadcast_to(self.trace.mb_index[:, :, None], members.shape)
+        return stage(members, mb, self.spec.run.minibatch)
 
     def batch_key(self):
         """Grid points with equal keys replay as one vmapped program:
         same problem (⇒ same grad_fn/init/batch shapes), same trace shape
-        (steps, c), same optimizer event, same μ and eval schedule."""
+        (steps, c), same optimizer event, same μ and eval schedule.
+        Sharded/grouped topologies replay per-spec (no vmapped lane
+        layout), so they never join a batch group."""
         if self.engine != "compiled" or self.problem is None:
             return None
         opt = spec_from_run(self.spec.run)
         if not opt.kernel_supported:
+            return None
+        if not self.trace.topology.is_trivial(self.spec.run.n_learners):
             return None
         return (id(self.problem), self.steps, self.trace.c, self.trace.mode,
                 opt, self.spec.run.minibatch, self.spec.eval_every)

@@ -18,7 +18,7 @@ every grid point shares the same ``grad_fn`` — the property that lets the
 driver vmap shape-compatible grid points through one compiled scan.
 
 ``mlp_teacher`` — the repo's CIFAR-scale stand-in (2-layer MLP on the
-teacher-classification task, DESIGN.md §9) — ships registered;
+teacher-classification task, DESIGN.md §10) — ships registered;
 :func:`register_problem` adds new ones (see ``tests/test_experiments.py``
 for a 4-line linear-regression example).
 """
@@ -34,10 +34,12 @@ import numpy as np
 from repro.data.synthetic import TeacherClassification
 
 
-def updates_for_epochs(epochs: float, mu: int, c: int, dataset: int) -> int:
+def updates_for_epochs(epochs: float, mu: int, c: int, dataset: int,
+                       group_size: int = 1) -> int:
     """Weight updates s.t. total samples == epochs·dataset (every update
-    consumes c·μ samples; hardsync has c = λ)."""
-    return max(1, int(epochs * dataset / (mu * c)))
+    consumes c·μ·gs samples: c slots, each aggregating ``group_size``
+    member minibatches — 1 without learner groups; hardsync has c = P)."""
+    return max(1, int(epochs * dataset / (mu * c * group_size)))
 
 
 # ---------------------------------------------------------------------------

@@ -24,9 +24,32 @@ ENGINES = ("auto", "compiled", "legacy", "measure")
 # homogeneous / two_speed / pareto samplers in core/trace.py);
 # "calibrated:<arch>" plugs in the calibrated per-minibatch cost model of
 # core/tradeoff.py for arch ∈ {base, adv, adv*} so the trace clock IS the
-# paper's runtime axis.
+# paper's runtime axis.  An optional ":<int>mb" suffix overrides the
+# workload's model size (e.g. "calibrated:adv:300mb" — the paper's Table-1
+# adversarial scenario, where the architectures' communication structure
+# actually separates; the default CIFAR CNN is ~350 kB and comm-invisible).
 CALIBRATED_PREFIX = "calibrated:"
 CALIBRATED_ARCHS = ("base", "adv", "adv*")
+
+
+def _parse_calibrated(duration: str):
+    """'calibrated:<arch>[:<int>mb]' → (arch, model_bytes | None); raises
+    ValueError on anything else."""
+    parts = duration[len(CALIBRATED_PREFIX):].split(":")
+    err = ValueError(
+        f"duration must be 'config' or 'calibrated:<arch>[:<int>mb]' with "
+        f"arch in {CALIBRATED_ARCHS}, got {duration!r}")
+    if not duration.startswith(CALIBRATED_PREFIX) or len(parts) not in (1, 2):
+        raise err
+    arch = parts[0]
+    if arch not in CALIBRATED_ARCHS:
+        raise err
+    if len(parts) == 1:
+        return arch, None
+    size = parts[1]
+    if not (size.endswith("mb") and size[:-2].isdigit()):
+        raise err
+    return arch, float(size[:-2]) * 1e6
 
 
 def _as_arg_tuple(args) -> Tuple[Tuple[str, object], ...]:
@@ -66,12 +89,7 @@ class ExperimentSpec:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {self.engine!r}")
         if self.duration != "config":
-            if (not self.duration.startswith(CALIBRATED_PREFIX)
-                    or self.duration[len(CALIBRATED_PREFIX):]
-                    not in CALIBRATED_ARCHS):
-                raise ValueError(
-                    f"duration must be 'config' or 'calibrated:<arch>' with "
-                    f"arch in {CALIBRATED_ARCHS}, got {self.duration!r}")
+            _parse_calibrated(self.duration)
         if self.problem is None:
             if self.engine not in ("auto", "measure"):
                 raise ValueError("problem=None (measure mode) only runs on "
@@ -81,6 +99,12 @@ class ExperimentSpec:
                                  "(no dataset to derive epochs from)")
         elif self.engine == "measure":
             raise ValueError("engine='measure' takes problem=None")
+        if self.engine == "legacy" and (self.run.shards > 1
+                                        or self.run.group_size > 1):
+            raise ValueError(
+                "engine='legacy' (the per-arrival host PS) models the flat "
+                "Rudra-base server only; sharded/grouped topologies "
+                "(shards/groups on RunConfig) replay on the compiled engine")
 
     def replace(self, **kw) -> "ExperimentSpec":
         """Copy with fields changed; validation re-runs (frozen contract)."""
@@ -97,13 +121,14 @@ class ExperimentSpec:
 
     def resolved_steps(self) -> int:
         """The update budget: ``steps`` verbatim, or epochs·dataset samples
-        converted at c·μ samples per update."""
+        converted at c·μ·group_size samples per update."""
         if self.steps is not None:
             return int(self.steps)
         prob = self.resolve_problem()
         return updates_for_epochs(self.epochs, self.run.minibatch,
                                   self.run.gradients_per_update,
-                                  prob.dataset_size)
+                                  prob.dataset_size,
+                                  group_size=self.run.group_size)
 
     def resolved_engine(self) -> str:
         if self.engine != "auto":
@@ -116,8 +141,10 @@ class ExperimentSpec:
         if self.duration == "config":
             return None
         from repro.core import tradeoff as to
-        arch = self.duration[len(CALIBRATED_PREFIX):]
+        arch, model_bytes = _parse_calibrated(self.duration)
         wl = to.WorkloadModel()
+        if model_bytes is not None:
+            wl = dataclasses.replace(wl, model_bytes=model_bytes)
         if self.problem is not None:
             prob = self.resolve_problem()
             wl = dataclasses.replace(

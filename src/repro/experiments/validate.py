@@ -19,13 +19,24 @@ from repro.experiments.result import validate_results_file
 
 def validate_paths(paths) -> int:
     """Validate every results JSON under ``paths``; returns the number of
-    files checked, raising ValueError on the first violation."""
+    files checked.  Raises ValueError on the first schema violation, on a
+    path that is neither a file nor a directory, and on a directory with no
+    ``*.json`` at all — an empty or missing results directory must fail the
+    CI gate loudly instead of "validating" nothing."""
     files = []
     for p in paths:
         if os.path.isdir(p):
-            files.extend(sorted(glob.glob(os.path.join(p, "*.json"))))
-        else:
+            found = sorted(glob.glob(os.path.join(p, "*.json")))
+            if not found:
+                raise ValueError(
+                    f"{p}: results directory contains no *.json files")
+            files.extend(found)
+        elif os.path.isfile(p):
             files.append(p)
+        else:
+            raise ValueError(f"{p}: no such results file or directory")
+    if not files:
+        raise ValueError("no results files given (empty path list)")
     for path in files:
         n = validate_results_file(path)
         print(f"[validate] {path}: ok ({n} records)")
@@ -37,11 +48,10 @@ def main(argv=None) -> int:
         [os.path.join("benchmarks", "results")]
     try:
         n = validate_paths(paths)
-    except ValueError as e:
+    except (ValueError, OSError) as e:
+        # OSError: unreadable/vanished file — same loud failure as a schema
+        # violation, never a silent green gate
         print(f"[validate] FAIL: {e}", file=sys.stderr)
-        return 1
-    if n == 0:
-        print("[validate] no results files found", file=sys.stderr)
         return 1
     print(f"[validate] {n} file(s) conform to the RunResult record schema")
     return 0

@@ -14,9 +14,10 @@ from repro.optim.spec import (KERNEL_OPTIMIZERS, OPTIMIZERS, RoundFold,
                               UpdateSpec, init_state, sequential_fold,
                               spec_from_run, update_event)
 from repro.optim.backends import (BACKENDS, apply_event_flat,
-                                  apply_round_folded, apply_single,
-                                  apply_update, apply_update_tree,
-                                  apply_update_flat, sgd_step)
+                                  apply_event_sharded, apply_round_folded,
+                                  apply_single, apply_update,
+                                  apply_update_tree, apply_update_flat,
+                                  sgd_step)
 from repro.optim import flatten  # noqa: F401
 
 __all__ = [
@@ -24,5 +25,6 @@ __all__ = [
     "UpdateSpec", "RoundFold", "init_state", "spec_from_run",
     "update_event", "sequential_fold",
     "apply_update", "apply_update_tree", "apply_update_flat",
-    "apply_event_flat", "apply_single", "apply_round_folded", "sgd_step",
+    "apply_event_flat", "apply_event_sharded", "apply_single",
+    "apply_round_folded", "sgd_step",
 ]

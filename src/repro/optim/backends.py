@@ -151,6 +151,27 @@ def apply_event_flat(spec: UpdateSpec, w, s, g, coef, lrs,
     return w, s
 
 
+def apply_event_sharded(spec: UpdateSpec, w, s, g, coef, lrs,
+                        mode: str = "combine"):
+    """:func:`apply_event_flat` vmapped over a leading shard axis — the
+    sharded-PS replay's per-event apply (DESIGN.md §6).
+
+    ``w``: (S, Dp) per-shard weight rows; ``s``: (S, Dp) state rows or None
+    (sgd); ``g``: (S, c, Dp) per-shard gradient slices; ``coef``/``lrs``:
+    (c,) shared across shards (every shard folds the same c pushes — the
+    update events are aligned, only the *pulled* slices differ).  Because
+    ``update_event`` is elementwise, the per-shard apply is exactly the
+    shard slice of the unsharded apply (partition invariance, pinned by
+    ``tests/test_topology.py``)."""
+    if not spec.kernel_supported:
+        raise ValueError(f"{spec.optimizer!r} has no flat event path")
+    fn = jax.vmap(
+        lambda ws, ss, gs: apply_event_flat(spec, ws, ss, gs, coef, lrs,
+                                            mode),
+        in_axes=(0, None if s is None else 0, 0))
+    return fn(w, s, g)
+
+
 # ---------------------------------------------------------------------------
 # pallas backend: one fused kernel launch over the concatenated model
 # ---------------------------------------------------------------------------

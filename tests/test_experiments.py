@@ -312,6 +312,28 @@ def test_stage_minibatches_matches_per_slot_batch_fn():
             np.testing.assert_array_equal(y[j, i], ys)
 
 
+def test_validate_cli_fails_loudly_on_missing_or_empty(tmp_path):
+    """The CI schema gate must exit non-zero when there is nothing to
+    validate — an empty or missing results directory is a failure, not a
+    silent pass (ISSUE-4 satellite)."""
+    from repro.experiments.validate import main, validate_paths
+    assert main([str(tmp_path / "does_not_exist")]) == 1
+    empty = tmp_path / "results"
+    empty.mkdir()
+    assert main([str(empty)]) == 1
+    with pytest.raises(ValueError):
+        validate_paths([str(empty)])
+    with pytest.raises(ValueError):
+        validate_paths([])
+    bad = empty / "broken.json"
+    bad.write_text("{not json")
+    assert main([str(empty)]) == 1
+    good = empty / "ok.json"
+    good.write_text(json.dumps(envelope("ok")))
+    bad.unlink()
+    assert main([str(empty)]) == 0
+
+
 def test_deprecated_shims_still_work():
     from repro.core import simulate_compiled, simulate_measure
     cfg = RunConfig(protocol="softsync", n_softsync=2, n_learners=4,
