@@ -18,6 +18,11 @@ Guarded metrics:
   Machine-relative, so the floor can sit much closer to the measurement.
 * ``batched_sweep_speedup``   — one vmapped program vs sequential replays
   for a shape-compatible grid cell.  Also machine-relative.
+* ``elastic_schedule_updates_per_s`` — host-side throughput of the
+  membership-resolution pass in ``core/trace.schedule`` on a churny
+  timeline (crash-restarts + leaves).  Absolute, wide margin like the
+  compiled throughput: catches the schedule pass collapsing (e.g. the
+  threshold refresh going quadratic), not runner noise.
 
 Fresh measurements land in ``benchmarks/results/bench_guard.json`` (the CI
 job uploads it as a workflow artifact).  To demonstrate the gate trips:
@@ -39,6 +44,7 @@ import sys
 from benchmarks.common import emit, save_results
 from benchmarks.sim_engine_bench import _bench_one, _bench_sweep
 from repro.config import RunConfig
+from repro.membership import MembershipTimeline
 
 FLOOR_PATH = os.path.join(os.path.dirname(__file__), "ci_floor.json")
 
@@ -49,7 +55,32 @@ FLOOR_MARGINS = {
     "compiled_updates_per_s": 0.25,
     "engine_speedup": 0.55,
     "batched_sweep_speedup": 0.55,
+    "elastic_schedule_updates_per_s": 0.25,
 }
+
+
+def _bench_elastic_schedule(updates: int = 600, repeats: int = 3) -> dict:
+    """Host-side wall clock of ``schedule()`` with a churny membership
+    timeline (the membership-resolution pass: event interleaving, dropped
+    pushes, λ(t) threshold refreshes, mask assembly)."""
+    import time
+
+    from repro.core.trace import schedule
+
+    churn = MembershipTimeline(tuple(
+        [(2.0 + 1.5 * i, i % 12, "crash") for i in range(8)]
+        + [(3.0 + 1.5 * i, i % 12, "join") for i in range(8)]
+        + [(30.0, 13, "leave"), (45.0, 13, "join")]))
+    cfg = RunConfig(protocol="softsync", n_softsync=2, n_learners=16,
+                    minibatch=4, seed=17, membership=churn)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        trace = schedule(cfg, updates)
+        best = min(best, time.perf_counter() - t0)
+    assert trace.valid is not None          # the elastic path actually ran
+    return {"updates": updates, "seconds": best,
+            "updates_per_s": updates / best}
 
 
 def measure() -> dict:
@@ -60,14 +91,17 @@ def measure() -> dict:
                     seed=17)
     row = _bench_one(cfg, updates=48, repeats=3)
     sweep = _bench_sweep(updates=30, lam=16, seeds=3, repeats=3)
+    elastic = _bench_elastic_schedule()
     return {
         "metrics": {
             "compiled_updates_per_s": row["compiled_updates_per_s"],
             "engine_speedup": row["speedup"],
             "batched_sweep_speedup": sweep["speedup"],
+            "elastic_schedule_updates_per_s": elastic["updates_per_s"],
         },
         "engine_cell": row,
         "sweep_cell": sweep,
+        "elastic_schedule_cell": elastic,
     }
 
 

@@ -3,7 +3,7 @@
 #
 #   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,table2,...]
 #
-# Mapping (DESIGN.md section 10):
+# Mapping (DESIGN.md section 11):
 #   fig4   -> staleness_distribution   (<sigma> ~= n, sigma <= 2n)
 #   fig5   -> lr_modulation            (alpha0/n rescues convergence)
 #   fig6_7 -> tradeoff_curves          ((sigma, mu, lambda) error/time curves)
@@ -31,6 +31,7 @@ BENCHES = [
     ("kernels", "benchmarks.kernel_bench"),
     ("sim_engine", "benchmarks.sim_engine_bench"),  # legacy loop vs compiled replay
     ("topology", "benchmarks.topology_scaling"),  # Rudra base/adv/adv* runtime curves
+    ("elastic", "benchmarks.elastic_churn"),  # churn + backup-hardsync curves
     ("bench_guard", "benchmarks.bench_guard"),    # CI perf floor gate
     ("baselines", "benchmarks.baselines"),   # paper sec-6 related work + sec-3.3 accrual
     ("cnn", "benchmarks.cnn"),               # Fig-5 on the paper's own CNN (~9 min)

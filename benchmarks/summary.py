@@ -127,6 +127,21 @@ def run(epochs: int = 10) -> dict:
                  f"speedup={span[lam0] / span[lam1]:.1f}x over "
                  f"{lam1 // lam0}x learners")
 
+    # ---- elastic churn / backup-hardsync (if elastic_churn has run) --------
+    elastic = os.path.join(RESULTS_DIR, "elastic_churn.json")
+    if os.path.exists(elastic):
+        with open(elastic) as f:
+            derived = json.load(f).get("derived", {})
+        out["elastic_churn"] = derived
+        for name, s in sorted(derived.get("scenarios", {}).items()):
+            emit(f"summary/elastic/{name}",
+                 f"err={s['test_error_mean']:.4f}",
+                 f"train_s={s['train_s_mean']:.0f}")
+        claims = derived.get("claims", {})
+        emit("summary/elastic/chen_ordering_holds",
+             all(claims.values()) if claims else False,
+             " ".join(k for k, v in sorted(claims.items()) if not v))
+
     # ---- simulator engine throughput (if sim_engine_bench has run) ---------
     bench = os.path.join(RESULTS_DIR, "sim_engine_bench.json")
     if os.path.exists(bench):

@@ -23,6 +23,8 @@ import dataclasses
 import math
 from typing import Optional, Sequence, Tuple
 
+from repro.membership import MembershipTimeline
+
 # ---------------------------------------------------------------------------
 # Block types that can appear inside a repeating unit.
 # ---------------------------------------------------------------------------
@@ -47,6 +49,50 @@ FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
 # per-minibatch compute-duration models for the simulator's schedule pass
 # (core/trace.make_duration_sampler dispatches on these)
 DURATION_MODELS = ("homogeneous", "two_speed", "pareto")
+
+# The calibrated-duration grammar: "calibrated:<arch>[:<int>mb]" plugs the
+# calibrated per-minibatch cost model of core/tradeoff.py into the schedule
+# pass for arch ∈ CALIBRATED_ARCHS, optionally overriding the workload's
+# model size (e.g. "calibrated:base:300mb" — the paper's Table-1 adversarial
+# scenario).  ONE parser serves both layers that accept these strings:
+# RunConfig.duration_model and ExperimentSpec.duration.
+CALIBRATED_PREFIX = "calibrated:"
+CALIBRATED_ARCHS = ("base", "adv", "adv*")
+
+
+def parse_calibrated(duration: str):
+    """``'calibrated:<arch>[:<int>mb]'`` → ``(arch, model_bytes | None)``;
+    raises ValueError (with the shared grammar message) on anything else."""
+    parts = duration[len(CALIBRATED_PREFIX):].split(":")
+    err = ValueError(
+        f"bad calibrated duration {duration!r}: expected "
+        f"'calibrated:<arch>[:<int>mb]' with arch in {CALIBRATED_ARCHS}")
+    if not duration.startswith(CALIBRATED_PREFIX) or len(parts) not in (1, 2):
+        raise err
+    arch = parts[0]
+    if arch not in CALIBRATED_ARCHS:
+        raise err
+    if len(parts) == 1:
+        return arch, None
+    size = parts[1]
+    if not (size.endswith("mb") and size[:-2].isdigit()):
+        raise err
+    return arch, float(size[:-2]) * 1e6
+
+
+def validate_duration_model(value: str) -> None:
+    """The ONE validator for ``RunConfig.duration_model``: a sampler name
+    from DURATION_MODELS, or a calibrated-grammar string (accept-and-defer:
+    ``core/trace.make_duration_sampler`` resolves it against the cost model
+    of ``core/tradeoff.py``)."""
+    if value.startswith(CALIBRATED_PREFIX):
+        parse_calibrated(value)
+        return
+    if value not in DURATION_MODELS:
+        raise ValueError(
+            f"unknown duration_model {value!r}: expected one of "
+            f"{DURATION_MODELS} or 'calibrated:<arch>[:<int>mb]' with arch "
+            f"in {CALIBRATED_ARCHS}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,6 +344,19 @@ class RunConfig:
     shards: int = 1
     groups: int = 0
     shard_pull_jitter: float = 0.0
+    # --- elastic membership (repro.membership; core/trace schedule pass) ----
+    # membership: join/leave/crash-restart events per learner.  Resolves
+    # entirely at schedule time: joins/leaves move the effective λ(t) that
+    # n-softsync's splitting threshold c(t) = max(1, ⌊P(t)/n⌋) follows, a
+    # crashed learner's in-flight push is dropped (a validity mask on the
+    # trace), and a restarted learner re-pulls with fresh timestamps.  An
+    # empty timeline reproduces the pre-elastic schedule bit-for-bit.
+    # backup: Chen et al. backup learners (protocol="hardsync" only): each
+    # round commits the first P − backup arrivals and cancels the rest —
+    # hardsync's accuracy at near-async runtime, a first-class point on the
+    # staleness axis.
+    membership: MembershipTimeline = MembershipTimeline()
+    backup: int = 0
     # --- distributed runtime ------------------------------------------------
     num_microbatches: int = 1
     remat: bool = True
@@ -323,8 +382,7 @@ class RunConfig:
         if self.lr_policy not in ("const", "staleness_inverse", "sqrt_scale",
                                   "per_gradient"):
             raise ValueError(f"unknown lr_policy {self.lr_policy!r}")
-        if self.duration_model not in DURATION_MODELS:
-            raise ValueError(f"unknown duration_model {self.duration_model!r}")
+        validate_duration_model(self.duration_model)
         if self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
         if self.groups < 0:
@@ -335,6 +393,28 @@ class RunConfig:
         if self.shard_pull_jitter < 0:
             raise ValueError(f"shard_pull_jitter must be >= 0, "
                              f"got {self.shard_pull_jitter}")
+        if not isinstance(self.membership, MembershipTimeline):
+            # accept raw event sequences (or None) for convenience
+            object.__setattr__(
+                self, "membership",
+                MembershipTimeline(tuple(self.membership or ())))
+        self.membership.validate_for(self.n_learners)
+        if self.backup < 0:
+            raise ValueError(f"backup must be >= 0, got {self.backup}")
+        if self.backup and self.protocol != "hardsync":
+            raise ValueError(
+                f"backup={self.backup} is the Chen et al. backup-learner "
+                f"variant of hardsync; protocol {self.protocol!r} already "
+                f"tolerates stragglers via staleness")
+        if self.backup >= self.n_pushers:
+            raise ValueError(
+                f"backup={self.backup} must leave at least one committed "
+                f"arrival per round (P = {self.n_pushers} pushers)")
+        if self.elastic and self.lr_policy == "per_gradient":
+            raise ValueError(
+                "per_gradient LRs imply sequential optimizer events, which "
+                "cannot mask an elastic timeline's cancelled pushes; use a "
+                "scalar lr_policy with elastic membership")
 
     def replace(self, **kw) -> "RunConfig":
         """A copy with ``kw`` fields changed — ``dataclasses.replace`` with
@@ -355,11 +435,19 @@ class RunConfig:
         return self.n_learners // self.n_pushers
 
     @property
+    def elastic(self) -> bool:
+        """True when the membership timeline actually changes the cluster."""
+        return not self.membership.static
+
+    @property
     def gradients_per_update(self) -> int:
         """c = ⌊P/n⌋ (Eq. 5 over the P pushing entities; P = λ ungrouped).
-        hardsync: exactly P."""
+        hardsync: P − backup (each round commits the first P − backup
+        arrivals; Chen et al.).  With an elastic timeline this is the
+        *width bound* of a trace row — rows fired while λ(t) < λ commit
+        fewer slots, masked on the trace."""
         if self.protocol == "hardsync":
-            return self.n_pushers
+            return max(1, self.n_pushers - self.backup)
         if self.protocol == "async":
             return 1
         return max(1, self.n_pushers // self.n_softsync)
@@ -388,7 +476,7 @@ class RunConfig:
 def validate_pairing(model: ModelConfig, shape: InputShape) -> Optional[str]:
     """Return a skip-reason string if (model, shape) must be skipped, else None.
 
-    Skips mirror DESIGN.md §7: encoder-only models have no decode step;
+    Skips mirror DESIGN.md §8: encoder-only models have no decode step;
     full-attention models need a sliding-window variant for long_500k (all of
     ours implement it, so only encoder-only skips remain).
     """

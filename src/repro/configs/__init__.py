@@ -61,7 +61,7 @@ def all_configs() -> Dict[str, ModelConfig]:
 
 def long_context_variant(cfg: ModelConfig, window: int = 8192) -> ModelConfig:
     """Sliding-window variant for long_500k on full-attention archs
-    (DESIGN.md §7).  No-op for attention-free models."""
+    (DESIGN.md §8).  No-op for attention-free models."""
     if cfg.attention_free or cfg.sliding_window:
         return cfg
     return dataclasses.replace(cfg, sliding_window=window)

@@ -4,7 +4,7 @@ Assigned: [audio] 48L d_model=1280 16H (GQA kv=16 = MHA) d_ff=5120 vocab=504
 [arXiv:2106.07447].  The conv feature extractor is a stub (precomputed frame
 embeddings per the assignment); the model is the 48-layer bidirectional
 encoder with a 504-way masked-prediction head.  Encoder-only ⇒ no decode
-shapes (DESIGN.md §7).
+shapes (DESIGN.md §8).
 """
 
 import dataclasses

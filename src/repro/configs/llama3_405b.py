@@ -2,7 +2,7 @@
 
 Assigned: [dense] 126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256
 [arXiv:2407.21783].  Requires FSDP-style 2-D parameter sharding
-(data × model) to fit v5e HBM (DESIGN.md §8).
+(data × model) to fit v5e HBM (DESIGN.md §9).
 """
 
 import dataclasses

@@ -8,8 +8,9 @@ from repro.core.lr_policies import (make_lr_policy, hardsync_lr, softsync_lr,
                                     resolve_trace_lrs)
 from repro.core.topology import RUDRA_ARCHS, Topology
 from repro.core.trace import (ArrivalTrace, make_duration_sampler, schedule)
-from repro.core.simulator import simulate, simulate_measure, SimResult
-from repro.core.engine import replay, replay_batch, simulate_compiled
+from repro.core.simulator import simulate, SimResult
+from repro.core.engine import replay, replay_batch
+from repro.membership import MembershipEvent, MembershipTimeline
 from repro.core.distributed import (make_train_step, make_hardsync_step,
                                     make_softsync_step, init_opt_state,
                                     round_event_lrs, fused_coefficients)
@@ -20,8 +21,9 @@ __all__ = [
     "make_lr_policy", "hardsync_lr", "softsync_lr", "resolve_trace_lrs",
     "RUDRA_ARCHS", "Topology",
     "ArrivalTrace", "make_duration_sampler", "schedule",
-    "simulate", "simulate_measure", "SimResult",
-    "replay", "replay_batch", "simulate_compiled",
+    "MembershipEvent", "MembershipTimeline",
+    "simulate", "SimResult",
+    "replay", "replay_batch",
     "make_train_step", "make_hardsync_step", "make_softsync_step",
     "init_opt_state", "round_event_lrs", "fused_coefficients",
 ]

@@ -62,21 +62,33 @@ class VectorClockLog:
     def __init__(self):
         self._records: Optional[List[StalenessRecord]] = []
         self._matrix: Optional[np.ndarray] = None   # (steps, c) pulled ts
+        self._valid: Optional[np.ndarray] = None    # (steps, c) slot mask
 
     @classmethod
-    def from_matrix(cls, pulled_ts: np.ndarray) -> "VectorClockLog":
+    def from_matrix(cls, pulled_ts: np.ndarray,
+                    valid: Optional[np.ndarray] = None) -> "VectorClockLog":
         """Build from a trace's (steps, c) vector-clock matrix: row j is the
-        clock of update j+1 (statistics stay vectorized on the matrix)."""
+        clock of update j+1 (statistics stay vectorized on the matrix).
+        ``valid`` (same shape, bool) excludes cancelled slots — an elastic
+        trace's unfilled/backup-cancelled pushes carry placeholder clocks
+        that must not enter the Fig.-4 statistics."""
         log = cls()
         log._matrix = np.asarray(pulled_ts, dtype=np.int64)
+        log._valid = None if valid is None else np.asarray(valid, bool)
         log._records = None
         return log
 
     @property
     def records(self) -> List[StalenessRecord]:
         if self._records is None:
-            self._records = [StalenessRecord(j + 1, row.tolist())
-                             for j, row in enumerate(self._matrix)]
+            if self._valid is None:
+                self._records = [StalenessRecord(j + 1, row.tolist())
+                                 for j, row in enumerate(self._matrix)]
+            else:
+                self._records = [
+                    StalenessRecord(j + 1, row[keep].tolist())
+                    for j, (row, keep) in enumerate(zip(self._matrix,
+                                                        self._valid))]
         return self._records
 
     def record(self, update_index: int,
@@ -97,6 +109,10 @@ class VectorClockLog:
         """⟨σ⟩ per update step (Fig. 4 main panels)."""
         sig = self._staleness_matrix()
         if sig is not None:
+            if self._valid is not None:
+                count = np.maximum(1, self._valid.sum(axis=1))
+                return (np.where(self._valid, sig, 0).sum(axis=1)
+                        / count).astype(np.float64)
             return sig.mean(axis=1).astype(np.float64)
         return np.array([r.average_staleness for r in self.records])
 
@@ -104,7 +120,8 @@ class VectorClockLog:
         """Per-gradient σ across the whole run (Fig. 4(b) inset)."""
         sig = self._staleness_matrix()
         if sig is not None:
-            return sig.reshape(-1)
+            return (sig[self._valid] if self._valid is not None
+                    else sig.reshape(-1))
         if not self.records:
             return np.zeros((0,))
         return np.concatenate([np.asarray(r.staleness_values)

@@ -29,7 +29,6 @@ traces is pinned by ``tests/test_trace_engine.py`` (EXPERIMENTS.md §Sim).
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -42,7 +41,7 @@ from repro.core.lr_policies import resolve_trace_lrs
 from repro.core.protocols import init_ps_state
 from repro.core.simulator import SimResult
 from repro.core.topology import Topology
-from repro.core.trace import ArrivalTrace, schedule
+from repro.core.trace import ArrivalTrace
 from repro.optim import flatten
 
 
@@ -60,7 +59,8 @@ def _unstack_tree(tree, c: int):
 @functools.lru_cache(maxsize=32)
 def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
                   layout: flatten.TreeLayout, batched: bool = False,
-                  shards: int = 1, group_size: int = 1):
+                  shards: int = 1, group_size: int = 1,
+                  masked: bool = False, member_masked: bool = False):
     """The jitted scan over update events — cached per static config so
     repeated replays (benchmark/sweep loops) reuse the compiled program;
     the LRU bound keeps long-lived processes from pinning every grad_fn
@@ -86,6 +86,15 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
       broadcasts); minibatches carry a (c, gs, …) leading shape and the
       member gradients are averaged before the apply.
 
+    Elastic membership (DESIGN.md §7) stays branch-free: ``masked=True``
+    reads each event's combine coefficients from the trace
+    (``x["coef"]``, zero on cancelled slots — the schedule pass resolved
+    who committed) instead of the static 1/c; ``member_masked=True`` does
+    the same for the group-member average (``x["mcoef"]``: a crashed
+    member's gradient gets weight 0, survivors renormalize).  The scan
+    body is otherwise identical — cancelled work is computed and then
+    folded with coefficient 0, which XLA treats as data, not control flow.
+
     ``batched=True`` returns ``jit(vmap(scan))``: the identical per-event
     body mapped over a leading batch axis of B independent grid points —
     one device program executes a whole multi-seed/multi-config sweep cell
@@ -101,6 +110,9 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
     coef = jnp.full((c,), 1.0 / c, jnp.float32)
     D = layout.total
     Dp = -(-D // shards)                  # Topology.padded_width(D)
+
+    def coef_of(x):
+        return x["coef"] if masked else coef
 
     def slot_weights(ring, x):
         """The (c, D) weight vectors the slots' gradients are computed
@@ -118,9 +130,17 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
         if group_size == 1:
             return jax.vmap(grad_fn)(pulled, x["batch"])
         # member gradients share the slot's pulled weights; average the
-        # (c, gs) gradient stack over the group axis (Eq. 3 locally)
+        # (c, gs) gradient stack over the group axis (Eq. 3 locally) —
+        # weighted by the survivor mask when membership is elastic (a
+        # group with a crashed member aggregates over survivors)
         g = jax.vmap(lambda p, b: jax.vmap(lambda bb: grad_fn(p, bb))(b))(
             pulled, x["batch"])
+        if member_masked:
+            mc = x["mcoef"]                              # (c, gs)
+            def wmean(a):
+                w = mc.reshape(mc.shape + (1,) * (a.ndim - 2))
+                return (a.astype(jnp.float32) * w).sum(axis=1)
+            return jax.tree.map(wmean, g)
         return jax.tree.map(lambda a: a.astype(jnp.float32).mean(axis=1), g)
 
     if spec.kernel_supported and shards > 1:
@@ -129,21 +149,21 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
             g = flatten.batched_tree_to_flat(gradients(ring, x))
             gp = flatten.shard_pack_grads(g, shards, Dp)     # (S, c, Dp)
             w, s = optim.apply_event_sharded(
-                spec, ring[:, x["prev"]], s, gp, coef, x["lrs"], mode)
+                spec, ring[:, x["prev"]], s, gp, coef_of(x), x["lrs"], mode)
             return (ring.at[:, x["slot"]].set(w), s), None
     elif spec.kernel_supported:
         def event(carry, x):
             ring, s = carry
             g = flatten.batched_tree_to_flat(gradients(ring, x))
             w, s = optim.apply_event_flat(spec, ring[x["prev"]], s, g,
-                                          coef, x["lrs"], mode)
+                                          coef_of(x), x["lrs"], mode)
             return (ring.at[x["slot"]].set(w), s), None
     else:
         def event(carry, x):
             ring, (params, opt_state) = carry
             grads = _unstack_tree(gradients(ring, x), c)
             params, opt_state = optim.apply_update_tree(
-                spec, params, opt_state, grads, coef, x["lrs"], mode)
+                spec, params, opt_state, grads, coef_of(x), x["lrs"], mode)
             ring = ring.at[x["slot"]].set(flatten.tree_to_flat(params))
             return (ring, (params, opt_state)), None
 
@@ -156,6 +176,8 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
 
     if batched:
         axes = {"ts": 0, "prev": None, "slot": None, "lrs": 0, "batch": 0}
+        if masked:
+            axes["coef"] = 0
         return jax.jit(jax.vmap(run, in_axes=(0, axes)))
     return jax.jit(run)
 
@@ -225,13 +247,18 @@ def _trace_xs(trace: ArrivalTrace, K: int, batch_fn: Optional[Callable],
         batches = jax.tree.map(jnp.asarray, batches)
     ts = (trace.pulled_ts if trace.shard_pulled_ts is None
           else trace.shard_pulled_ts)
-    return {
+    xs = {
         "ts": jnp.asarray(ts % K, jnp.int32),
         "prev": jnp.asarray(steps_idx % K, jnp.int32),
         "slot": jnp.asarray((steps_idx + 1) % K, jnp.int32),
         "lrs": jnp.asarray(trace.lrs, jnp.float32),
         "batch": batches,
     }
+    if trace.valid is not None:
+        xs["coef"] = jnp.asarray(trace.event_coef())
+    if trace.member_valid is not None:
+        xs["mcoef"] = jnp.asarray(trace.member_coef())
+    return xs
 
 
 def replay(trace: ArrivalTrace, run: RunConfig, *,
@@ -263,9 +290,16 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
         raise ValueError(
             f"{spec.optimizer!r} has no flat event path, so no sharded "
             f"replay (shards={S}); use a kernel-supported optimizer")
+    if trace.valid is not None and trace.mode != "combine":
+        raise ValueError(
+            f"elastic traces replay in 'combine' mode only (cancelled "
+            f"slots fold with coefficient 0; sequential optimizer events "
+            f"cannot be masked), got mode={trace.mode!r}")
 
     scan_fn = _make_scan_fn(grad_fn, spec, trace.mode, c, K, layout,
-                            shards=S, group_size=gs)
+                            shards=S, group_size=gs,
+                            masked=trace.valid is not None,
+                            member_masked=trace.member_valid is not None)
 
     xs = _trace_xs(trace, K, batch_fn)
     flat0 = flatten.tree_to_flat(init_params)
@@ -346,7 +380,9 @@ def replay_batch(traces: Sequence[ArrivalTrace],
     Restrictions (the driver falls back to sequential replays otherwise):
     kernel-supported optimizers only (sgd / momentum / adagrad — adamw's
     pytree carry has no flat lane layout), trivial (Rudra-base) topology
-    only (sharded/grouped traces replay per-spec), one shared ``grad_fn`` and
+    only (sharded/grouped traces replay per-spec), all lanes agreeing on
+    elasticity (masked combine-mode traces batch with other masked lanes —
+    the per-event coefficients are just more lane data), one shared ``grad_fn`` and
     ``init_params`` (same problem), per-lane ``batch_fns`` — or per-lane
     pre-staged ``batches`` (leading (steps, c) axes; a problem's vectorized
     ``stage_minibatches``), which skips the per-slot staging loop entirely.
@@ -361,12 +397,20 @@ def replay_batch(traces: Sequence[ArrivalTrace],
     for trace, run in zip(traces, runs):
         _check_trace(trace, run)
     steps, c, mode = traces[0].steps, traces[0].c, traces[0].mode
+    masked = traces[0].valid is not None
     for trace in traces[1:]:
         if (trace.steps, trace.c, trace.mode) != (steps, c, mode):
             raise ValueError(
                 f"batch members must share trace shape: "
                 f"(steps={steps}, c={c}, mode={mode!r}) vs "
                 f"(steps={trace.steps}, c={trace.c}, mode={trace.mode!r})")
+        if (trace.valid is not None) != masked:
+            raise ValueError(
+                "batch members must agree on elasticity: masked (elastic) "
+                "and dense traces compile different scan bodies — group "
+                "them separately")
+    if masked and mode != "combine":
+        raise ValueError("elastic traces replay in 'combine' mode only")
     spec = optim.spec_from_run(runs[0])
     for run in runs[1:]:
         other = optim.spec_from_run(run)
@@ -385,7 +429,8 @@ def replay_batch(traces: Sequence[ArrivalTrace],
                 f"sharded/grouped traces sequentially")
     K = max(trace.max_staleness for trace in traces) + 1
     layout = flatten.layout_of(init_params)
-    scan_fn = _make_scan_fn(grad_fn, spec, mode, c, K, layout, batched=True)
+    scan_fn = _make_scan_fn(grad_fn, spec, mode, c, K, layout, batched=True,
+                            masked=masked)
 
     if batches is None:
         xs_lanes = [_trace_xs(trace, K, fn)
@@ -440,28 +485,3 @@ def replay_batch(traces: Sequence[ArrivalTrace],
                       trace.minibatches, params_of(carry, b, steps),
                       histories[b])
             for b, trace in enumerate(traces)]
-
-
-def simulate_compiled(run: RunConfig, *,
-                      steps: int,
-                      grad_fn: Optional[Callable] = None,
-                      init_params=None,
-                      batch_fn: Optional[Callable] = None,
-                      eval_fn: Optional[Callable] = None,
-                      eval_every: int = 0,
-                      duration_sampler: Optional[Callable] = None
-                      ) -> SimResult:
-    """DEPRECATED shim: the canonical driver is ``repro.experiments``
-    (``run(ExperimentSpec(...))``); raw-callable escapes go through
-    ``repro.experiments.driver.execute``.  Kept one release for callers of
-    the PR-2 surface; same signature, same SimResult."""
-    warnings.warn(
-        "simulate_compiled is deprecated: drive experiments through "
-        "repro.experiments.run(ExperimentSpec(...)) — or "
-        "repro.experiments.driver.execute for raw grad_fn/batch_fn "
-        "callables", DeprecationWarning, stacklevel=2)
-    from repro.experiments.driver import execute   # lazy: layering, no cycle
-    return execute(run, steps=steps, grad_fn=grad_fn,
-                   init_params=init_params, batch_fn=batch_fn,
-                   eval_fn=eval_fn, eval_every=eval_every,
-                   duration_sampler=duration_sampler, engine="compiled")

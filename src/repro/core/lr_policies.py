@@ -16,7 +16,7 @@ list of per-gradient α for ``per_gradient``), matching what
 from __future__ import annotations
 
 import math
-from typing import List, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -26,7 +26,7 @@ LR = Union[float, List[float]]
 
 
 def resolve_trace_lrs(run: RunConfig, pulled_ts: np.ndarray,
-                      update_ts: np.ndarray = None
+                      update_ts: Optional[np.ndarray] = None
                       ) -> Tuple[np.ndarray, str]:
     """Vectorized trace-time policy resolution (schedule pass, DESIGN.md §4).
 
@@ -77,7 +77,8 @@ def hardsync_lr(run: RunConfig) -> float:
         run.n_learners * run.minibatch / run.ref_batch)
 
 
-def softsync_lr(run: RunConfig, measured_staleness: float = None) -> float:
+def softsync_lr(run: RunConfig,
+                measured_staleness: Optional[float] = None) -> float:
     """α₀/⟨σ⟩ (Eq. 6).  Pass the measured ⟨σ⟩ when available (the distributed
     round-based engine has ⟨σ⟩ = (n−1)/2 rather than the pipelined n)."""
     sigma = (measured_staleness if measured_staleness is not None

@@ -80,8 +80,9 @@ class ParameterServerState:
         ``spec_from_run`` mapping the compiled replay engine uses
         (:func:`init_ps_state`), so the two stay field-for-field aligned.
 
-        The host PS models the *flat* Rudra-base server only; sharded /
-        grouped topologies (DESIGN.md §6) have no per-arrival oracle and
+        The host PS models the *flat, static* Rudra-base server only;
+        sharded/grouped topologies (DESIGN.md §6) and elastic membership /
+        backup learners (DESIGN.md §7) have no per-arrival oracle and
         replay exclusively on ``core.engine``."""
         from repro.core.topology import Topology   # lazy: keeps layering flat
         topo = Topology.from_run(run)
@@ -90,6 +91,12 @@ class ParameterServerState:
                 f"the host PS (legacy per-arrival loop) models the flat "
                 f"Rudra-base server; topology {topo} replays on "
                 f"core.engine only")
+        if run.elastic or run.backup:
+            raise ValueError(
+                f"the host PS (legacy per-arrival loop) models a static "
+                f"cluster; elastic membership ({run.membership}) / "
+                f"backup={run.backup} resolve at schedule time and replay "
+                f"on core.engine only")
         return cls(params, run.gradients_per_update, backend=backend,
                    spec=optim.spec_from_run(run))
 

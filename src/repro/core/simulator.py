@@ -21,8 +21,11 @@ Two modes:
 The sgd mode here is the **legacy per-arrival loop**: one ``grad_fn`` call
 and one optimizer dispatch per gradient, on the host.  It is kept as the
 oracle the compiled trace/replay engine (``core/engine.py``, DESIGN.md §4)
-is equivalence-tested against; production sweeps should use
-``engine.simulate_compiled``.
+is equivalence-tested against; production experiments run through
+``repro.experiments`` (``run(ExperimentSpec(...))``).  The oracle models
+the flat, static Rudra-base server only: sharded/grouped topologies and
+elastic membership (crash/restart, backup learners) replay exclusively on
+the compiled engine and are rejected here.
 
 The simulated clock also yields the paper's runtime axis: total train time =
 simulated time of the last update, with per-minibatch durations from the
@@ -161,20 +164,3 @@ def simulate(run: RunConfig,
             heap, (t + sampler(rng, run.minibatch, li), mb + lam, li))
 
     return SimResult(log, updates, t, mb, ps.params, history)
-
-
-def simulate_measure(run: RunConfig, *, steps: int,
-                     duration_sampler: Optional[Callable] = None
-                     ) -> SimResult:
-    """DEPRECATED shim: measure mode is an ``ExperimentSpec`` with
-    ``problem=None`` — ``repro.experiments.run`` returns the Fig.-4
-    statistics as a RunResult record.  Kept one release for callers of the
-    pre-experiments surface; same signature, same SimResult."""
-    import warnings
-    warnings.warn(
-        "simulate_measure is deprecated: use repro.experiments.run("
-        "ExperimentSpec(run=cfg, steps=n)) for measure-mode statistics",
-        DeprecationWarning, stacklevel=2)
-    from repro.experiments.driver import execute   # lazy: layering, no cycle
-    return execute(run, steps=steps, duration_sampler=duration_sampler,
-                   engine="measure")

@@ -132,6 +132,14 @@ class Topology:
         gs = self.group_size(n_learners)
         return np.arange(n_learners, dtype=np.int32).reshape(-1, gs)
 
+    def active_pushers(self, learner_active: np.ndarray) -> np.ndarray:
+        """(P,) bool — which pushers are alive given a per-learner activity
+        vector: a group keeps pushing as long as ONE member lives, and its
+        pushes aggregate over the surviving members (the membership ×
+        groups rule, DESIGN.md §7).  Ungrouped: the learners themselves."""
+        active = np.asarray(learner_active, bool)
+        return active[self.members(active.shape[0])].any(axis=1)
+
     def is_trivial(self, n_learners: int) -> bool:
         """Rudra-base: one shard, one learner per pusher — today's path."""
         return self.shards == 1 and self.group_size(n_learners) == 1

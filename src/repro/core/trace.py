@@ -12,7 +12,11 @@ simulated clock, and the LRs resolved from the run's policy.  Phase 2
 The schedule draws from ``np.random.default_rng(run.seed)`` in exactly the
 order the legacy loop does, so a trace scheduled with the same seed
 reproduces the legacy arrival order bit-for-bit (the oracle-equivalence
-contract, ``tests/test_trace_engine.py``).
+contract, ``tests/test_trace_engine.py``).  Elastic membership
+(``run.membership`` joins/leaves/crash-restarts, ``run.backup`` hardsync
+backup learners — DESIGN.md §7) also resolves here, into validity masks on
+the trace; a static timeline keeps the rng draw order untouched
+(``tests/test_elastic.py``).
 
 Duration samplers are pluggable ``(rng, mu, learner) -> seconds`` callables;
 :func:`make_duration_sampler` builds the one selected by
@@ -31,14 +35,17 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import inspect
+import math
 from typing import Callable, Optional
 
 import numpy as np
 
-from repro.config import DURATION_MODELS, RunConfig
+from repro.config import (CALIBRATED_PREFIX, DURATION_MODELS, RunConfig,
+                          parse_calibrated)
 from repro.core.clock import VectorClockLog, staleness_matrix
 from repro.core.lr_policies import resolve_trace_lrs
 from repro.core.topology import Topology
+from repro.membership import MembershipTimeline
 
 
 # ---------------------------------------------------------------------------
@@ -55,7 +62,19 @@ def base_duration(rng: np.random.Generator, mu: int) -> float:
 
 def make_duration_sampler(run: RunConfig) -> Callable:
     """The ``(rng, mu, learner) -> seconds`` sampler selected by
-    ``run.duration_model``."""
+    ``run.duration_model`` — one of the stochastic models below, or a
+    ``calibrated:<arch>[:<int>mb]`` string resolving to the calibrated
+    per-minibatch cost model of ``core/tradeoff.py`` (the same grammar
+    ``ExperimentSpec.duration`` accepts; ``repro.config.parse_calibrated``
+    is the shared parser)."""
+    if run.duration_model.startswith(CALIBRATED_PREFIX):
+        from repro.core import tradeoff as to     # lazy: keep layering flat
+        arch, model_bytes = parse_calibrated(run.duration_model)
+        wl = to.WorkloadModel()
+        if model_bytes is not None:
+            wl = dataclasses.replace(wl, model_bytes=model_bytes)
+        return to.minibatch_duration_sampler(
+            arch, run.n_learners, to.calibrate_to_baseline(), wl)
     if run.duration_model == "homogeneous":
         def sampler(rng, mu, learner):
             return base_duration(rng, mu)
@@ -109,6 +128,21 @@ class ArrivalTrace:
     come from ``member_learners``).  With S > 1 PS shards,
     ``shard_pulled_ts`` records the per-shard timestamps of the slices the
     pusher assembled its weights from (inconsistent reads; see topology.py).
+
+    **Elastic membership** (DESIGN.md §7) resolves into two optional masks —
+    the replay engine never branches per event, it only reweights:
+
+    * ``valid`` (steps, c) bool: which slots of each row actually committed.
+      Rows fired while λ(t) < λ (leaves/crashes shrank the n-softsync
+      threshold, or backup-hardsync cancelled the slowest arrivals) have
+      trailing unfilled slots: their ``learner``/``mb_index`` point at
+      benign real data (learner 0, counter 0), ``pulled_ts`` is the row
+      index (σ = 0), and the replay folds them with coefficient 0
+      (:meth:`event_coef`).  None ⇔ every row is full (the static world).
+    * ``member_valid`` (steps, c, gs) bool: per-slot member survival for
+      grouped topologies — a group with crashed/left members aggregates
+      over the survivors (:meth:`member_coef`).  None ⇔ ungrouped or no
+      member ever missed a push.
     """
 
     protocol: str
@@ -124,6 +158,10 @@ class ArrivalTrace:
     # Invariant: pulled_ts[j, i] <= shard_pulled_ts[j, i, s] <= j (a shard
     # slice is never staler than the logical pull, never from the future).
     shard_pulled_ts: Optional[np.ndarray] = None
+    # elastic-membership masks (None = dense / full membership; see class
+    # docstring)
+    valid: Optional[np.ndarray] = None          # (steps, c) bool
+    member_valid: Optional[np.ndarray] = None   # (steps, c, gs) bool
 
     @property
     def steps(self) -> int:
@@ -140,10 +178,40 @@ class ArrivalTrace:
         return self.topology.group_size(self.n_learners)
 
     @property
+    def elastic(self) -> bool:
+        """True when a membership timeline (or backup cancellation) masked
+        any slot or group member of this trace."""
+        return self.valid is not None or self.member_valid is not None
+
+    @property
     def minibatches(self) -> int:
-        """Minibatch gradients consumed by the trace (each of the steps·c
-        slots aggregates group_size member gradients)."""
+        """Minibatch gradients the trace actually commits: cancelled slots
+        and crashed-out group members don't count (dense traces: steps·c·gs
+        exactly as before)."""
+        if self.member_valid is not None:
+            slot_on = (self.valid if self.valid is not None
+                       else np.ones(self.pulled_ts.shape, bool))
+            return int((self.member_valid & slot_on[:, :, None]).sum())
+        if self.valid is not None:
+            return int(self.valid.sum()) * self.group_size
         return self.steps * self.c * self.group_size
+
+    def event_coef(self) -> np.ndarray:
+        """(steps, c) float32 combine coefficients: uniform over each row's
+        committed slots, 0 on cancelled/unfilled ones (dense: 1/c)."""
+        if self.valid is None:
+            return np.full((self.steps, self.c), 1.0 / self.c, np.float32)
+        count = np.maximum(1, self.valid.sum(axis=1, keepdims=True))
+        return (self.valid / count).astype(np.float32)
+
+    def member_coef(self) -> Optional[np.ndarray]:
+        """(steps, c, gs) float32 member-averaging weights — uniform over a
+        slot's surviving members — or None when every push was full (the
+        replay then keeps its plain mean)."""
+        if self.member_valid is None:
+            return None
+        count = np.maximum(1, self.member_valid.sum(axis=2, keepdims=True))
+        return (self.member_valid / count).astype(np.float32)
 
     def member_learners(self) -> Optional[np.ndarray]:
         """(steps, c, gs) int32 member learner ids behind each slot, or
@@ -181,8 +249,9 @@ class ArrivalTrace:
         return float(self.event_time[-1]) if self.steps else 0.0
 
     def clock_log(self) -> VectorClockLog:
-        """Fig.-4 statistics, trace-native (vectorized over the σ matrix)."""
-        return VectorClockLog.from_matrix(self.pulled_ts)
+        """Fig.-4 statistics, trace-native (vectorized over the σ matrix;
+        cancelled slots are excluded from every statistic)."""
+        return VectorClockLog.from_matrix(self.pulled_ts, valid=self.valid)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +292,36 @@ def _shard_pulled_ts(topo: Topology, run: RunConfig, pull_time: np.ndarray,
     return np.clip(seen, lo, hi).astype(np.int32)
 
 
+class _MembershipCursor:
+    """Orders a timeline's events against the schedule clock: ``peek_t``
+    is the next unprocessed event's time (inf when exhausted), ``pop``
+    consumes it and folds it into the per-learner activity vector."""
+
+    def __init__(self, timeline: MembershipTimeline, n_learners: int):
+        self.events = timeline.events
+        self.i = 0
+        self.active = timeline.initial_active(n_learners)
+
+    def peek_t(self) -> float:
+        return (self.events[self.i].t if self.i < len(self.events)
+                else math.inf)
+
+    def pop(self):
+        ev = self.events[self.i]
+        self.i += 1
+        self.active[ev.learner] = ev.kind == "join"
+        return ev
+
+
+def _finish_masks(slot_on: np.ndarray, mmask: np.ndarray, gs: int):
+    """(valid, member_valid) in their canonical None-when-dense forms."""
+    valid = None if slot_on.all() else slot_on
+    member_valid = None
+    if gs > 1 and (~mmask & slot_on[:, :, None]).any():
+        member_valid = mmask
+    return valid, member_valid
+
+
 def schedule(run: RunConfig, steps: int,
              duration_sampler: Optional[Callable] = None) -> ArrivalTrace:
     """Run the gradient-free event queue for ``steps`` updates.
@@ -235,6 +334,17 @@ def schedule(run: RunConfig, steps: int,
     to the ungrouped loop.  PS shards never change the arrival schedule;
     they only add the per-shard pulled-timestamp resolution
     (:func:`_shard_pulled_ts`).
+
+    **Elastic membership** (``run.membership``) resolves here, entirely at
+    schedule time: membership events interleave with arrivals in time
+    order (an event at the same instant as an arrival applies first), a
+    crashed pusher's in-flight push is dropped, a restarted learner
+    re-pulls with fresh timestamps, and the n-softsync firing threshold
+    follows the live pusher count c(t) = max(1, ⌊P(t)/n⌋).  A static
+    timeline draws from the rng in exactly the pre-elastic order and
+    returns a mask-free trace (pinned bitwise by ``tests/test_elastic.py``).
+    ``run.backup`` = b (hardsync) commits the first P − b arrivals per
+    round and cancels the rest (Chen et al. backup learners).
     """
     lam = run.n_learners
     topo = Topology.from_run(run)
@@ -244,71 +354,229 @@ def schedule(run: RunConfig, steps: int,
     sampler = as_learner_sampler(duration_sampler or
                                  make_duration_sampler(run))
     mu = run.minibatch
+    cur = _MembershipCursor(run.membership, lam)
 
-    def push_duration(p: int) -> float:
-        # group-local barrier: gs member gradients, max of their durations
-        # (gs = 1 ⇒ one draw, the legacy per-learner schedule)
-        return max(sampler(rng, mu, int(m)) for m in members[p])
+    def draw_duration(p: int, mask: np.ndarray) -> float:
+        # group-local barrier over the members present at dispatch: gs
+        # member draws in member order, max of their durations (full
+        # membership + gs = 1 ⇒ one draw, the legacy per-learner schedule)
+        return max(sampler(rng, mu, int(m))
+                   for m, on in zip(members[p], mask) if on)
 
     if run.protocol == "hardsync":
-        # barrier rounds: every pusher contributes its step-th aggregate
-        # computed on the round-start weights (timestamp = step).
-        times = np.zeros((steps,))
-        t = 0.0
-        for step in range(steps):
-            t += max(push_duration(p) for p in range(pushers))
-            times[step] = t
-        rows = np.arange(steps, dtype=np.int32)[:, None]
-        learner = np.broadcast_to(np.arange(pushers, dtype=np.int32),
-                                  (steps, pushers)).copy()
-        pulled = np.broadcast_to(rows, (steps, pushers)).copy()
-        mb_idx = pulled.copy()
-        lrs, mode = resolve_trace_lrs(run, pulled)
-        shard_ts = None
-        if topo.shards > 1:
-            # the barrier implies consistent pulls: every shard slice is
-            # the round-start snapshot
-            shard_ts = np.broadcast_to(
-                pulled[:, :, None], pulled.shape + (topo.shards,)).copy()
-        return ArrivalTrace(run.protocol, lam, learner, pulled, mb_idx,
-                            times, lrs, mode, topo, shard_ts)
+        return _schedule_hardsync(run, steps, topo, members, cur,
+                                  draw_duration)
+    return _schedule_queue(run, steps, topo, members, cur, draw_duration)
 
-    # ------------- softsync / async: the priority queue ---------------------
-    c = run.gradients_per_update
-    heap = []
-    for i in range(pushers):
-        heapq.heappush(heap, (push_duration(i), i, i))
+
+def _schedule_hardsync(run: RunConfig, steps: int, topo: Topology,
+                       members: np.ndarray, cur: _MembershipCursor,
+                       draw_duration: Callable) -> ArrivalTrace:
+    """Barrier rounds: every live pusher computes its round aggregate on
+    the round-start weights (timestamp = step); the round commits the
+    first ``P_active − backup`` arrivals (in pusher order on the trace
+    row) and cancels the rest.  Membership at the barrier: the active set
+    is read at round start; a crash mid-round drops that member's
+    contribution (the whole push if nobody survives); joins/leaves take
+    effect at the next barrier."""
+    lam = run.n_learners
+    pushers, gs = members.shape
+    b = run.backup
+    W = run.gradients_per_update           # row-width bound: P − b
+    learner = np.zeros((steps, W), np.int32)
+    slot_on = np.zeros((steps, W), bool)
+    mmask = np.ones((steps, W, gs), bool)
+    times = np.zeros((steps,))
+    t = 0.0
+    for step in range(steps):
+        # active set at the barrier; an all-dead cluster stalls until the
+        # next join (the barrier cannot proceed with zero learners)
+        while True:
+            while cur.peek_t() <= t:
+                cur.pop()
+            act = cur.active[members]      # (P, gs)
+            if act.any():
+                break
+            if cur.peek_t() == math.inf:
+                raise ValueError(
+                    f"cluster died: no active learners and no future joins "
+                    f"at t={t:.3f} after {step}/{steps} hardsync rounds — "
+                    f"extend the membership timeline")
+            t = cur.peek_t()
+        arrivals = []                      # [completion, pusher, mask]
+        for p in range(pushers):
+            if act[p].any():
+                mask = act[p].copy()
+                arrivals.append([t + draw_duration(p, mask), p, mask])
+        commit_n = max(1, len(arrivals) - b)
+        committed = []
+        for comp, p, mask in sorted(arrivals, key=lambda a: (a[0], a[1])):
+            # crashes up to this completion kill mid-round contributions
+            # of every not-yet-finished push (same-instant events first)
+            while cur.peek_t() <= comp:
+                ev = cur.pop()
+                if ev.kind == "crash":
+                    cp, pos = divmod(ev.learner, gs)
+                    for a in arrivals:
+                        if a[1] == cp and a[0] >= ev.t:
+                            a[2][pos] = False
+            if mask.any():
+                committed.append((comp, p, mask))
+                if len(committed) == commit_n:
+                    break
+        if not committed:
+            raise ValueError(
+                f"hardsync round {step}: every in-flight push crashed "
+                f"before completing (t={t:.3f}) — nothing to commit")
+        t = committed[-1][0]               # the round barrier
+        times[step] = t
+        committed.sort(key=lambda a: a[1])  # trace rows in pusher order
+        for i, (_, p, mask) in enumerate(committed):
+            learner[step, i] = p
+            slot_on[step, i] = True
+            mmask[step, i] = mask
+    rows = np.arange(steps, dtype=np.int32)[:, None]
+    pulled = np.broadcast_to(rows, (steps, W)).copy()
+    mb_idx = pulled.copy()
+    lrs, mode = resolve_trace_lrs(run, pulled)
+    shard_ts = None
+    if topo.shards > 1:
+        # the barrier implies consistent pulls: every shard slice is
+        # the round-start snapshot
+        shard_ts = np.broadcast_to(
+            pulled[:, :, None], pulled.shape + (topo.shards,)).copy()
+    valid, member_valid = _finish_masks(slot_on, mmask, gs)
+    return ArrivalTrace(run.protocol, lam, learner, pulled, mb_idx,
+                        times, lrs, mode, topo, shard_ts,
+                        valid=valid, member_valid=member_valid)
+
+
+def _schedule_queue(run: RunConfig, steps: int, topo: Topology,
+                    members: np.ndarray, cur: _MembershipCursor,
+                    draw_duration: Callable) -> ArrivalTrace:
+    """softsync / async: the priority queue, with membership events
+    interleaved in time order."""
+    lam = run.n_learners
+    pushers, gs = members.shape
+    n = run.n_softsync
+    W = run.gradients_per_update           # row-width bound (full cluster)
+    heap = []                              # (completion, tiebreak, p, eid)
+    recs = {}                              # eid -> member mask (mutable)
+    in_flight = [None] * pushers           # live eid per pusher
+    eid_next = 0
+
+    learner = np.zeros((steps, W), np.int32)
+    pulled = np.zeros((steps, W), np.int32)
+    mb_idx = np.zeros((steps, W), np.int32)
+    pull_time = np.zeros((steps, W))
+    slot_on = np.zeros((steps, W), bool)
+    mmask = np.ones((steps, W, gs), bool)
+    times = np.zeros((steps,))
     pulled_ts = [0] * pushers
     pull_t = [0.0] * pushers               # when the pusher last pulled
     mb_done = [0] * pushers
-    learner = np.zeros((steps, c), np.int32)
-    pulled = np.zeros((steps, c), np.int32)
-    mb_idx = np.zeros((steps, c), np.int32)
-    pull_time = np.zeros((steps, c))
-    times = np.zeros((steps,))
     timestamp = 0
     slot = 0
     mb = 0
+
+    def dispatch(p: int, t0: float, tiebreak) -> None:
+        nonlocal eid_next
+        mask = cur.active[members[p]].copy()
+        eid = eid_next
+        eid_next += 1
+        recs[eid] = mask
+        in_flight[p] = eid
+        heapq.heappush(heap, (t0 + draw_duration(p, mask), tiebreak, p, eid))
+
+    c_now = W
+
+    def refresh_c() -> None:
+        # n-softsync's splitting threshold follows the LIVE pusher count:
+        # c(t) = max(1, ⌊P(t)/n⌋) (async: always 1)
+        nonlocal c_now
+        if run.protocol == "async":
+            return
+        p_act = int(topo.active_pushers(cur.active).sum())
+        c_now = max(1, p_act // n)
+
+    def apply_event(ev) -> None:
+        p = ev.learner // gs
+        if ev.kind == "join":
+            if in_flight[p] is None:
+                # the (re)joined learner pulls NOW: fresh timestamps, then
+                # starts computing (an idle pusher comes back to life; a
+                # pusher with survivors still computing picks the member
+                # up at its next dispatch)
+                pulled_ts[p] = timestamp
+                pull_t[p] = ev.t
+                dispatch(p, ev.t, mb + pushers)
+        elif ev.kind == "crash":
+            eid = in_flight[p]
+            if eid is not None:
+                mask = recs[eid]
+                mask[ev.learner - p * gs] = False
+                if not mask.any():         # the whole in-flight push is lost
+                    in_flight[p] = None    # (its heap entry pops as a no-op)
+        # graceful leave: the in-flight push still arrives; the learner
+        # simply stops re-pulling (the redispatch check below)
+        refresh_c()
+
+    refresh_c()
+    for p in range(pushers):
+        if cur.active[members[p]].any():
+            dispatch(p, 0.0, p)
     while timestamp < steps:
-        t, _, li = heapq.heappop(heap)
+        # membership events interleave with arrivals in time order; an
+        # event at the same instant as an arrival applies first (a join
+        # may dispatch a push that lands before the current heap top)
+        while cur.peek_t() <= (heap[0][0] if heap else math.inf):
+            if cur.peek_t() == math.inf:
+                break
+            apply_event(cur.pop())
+        if not heap:
+            raise ValueError(
+                f"cluster died: no active learners and no future joins "
+                f"after {timestamp}/{steps} updates — extend the "
+                f"membership timeline")
+        t, _, p, eid = heapq.heappop(heap)
+        mask = recs.pop(eid)
+        if in_flight[p] == eid:
+            in_flight[p] = None
+        if not mask.any():
+            continue                       # crashed-out push: dropped
         mb += 1
-        learner[timestamp, slot] = li
-        pulled[timestamp, slot] = pulled_ts[li]
-        pull_time[timestamp, slot] = pull_t[li]
-        mb_idx[timestamp, slot] = mb_done[li]
-        mb_done[li] += 1
+        learner[timestamp, slot] = p
+        pulled[timestamp, slot] = pulled_ts[p]
+        pull_time[timestamp, slot] = pull_t[p]
+        mb_idx[timestamp, slot] = mb_done[p]
+        slot_on[timestamp, slot] = True
+        mmask[timestamp, slot] = mask
+        mb_done[p] += 1
         slot += 1
-        if slot == c:                          # the PS fires
+        if slot >= c_now:                  # the PS fires
             times[timestamp] = t
             timestamp += 1
             slot = 0
         # pullWeights: pick up the current timestamp
-        pulled_ts[li] = timestamp
-        pull_t[li] = t
-        heapq.heappush(heap, (t + push_duration(li), mb + pushers, li))
+        pulled_ts[p] = timestamp
+        pull_t[p] = t
+        if cur.active[members[p]].any():
+            dispatch(p, t, mb + pushers)
+        else:
+            in_flight[p] = None            # left/crashed: stops pushing
+
+    # unfilled slots carry benign placeholders: σ = 0 weights (the row's
+    # own timestamp), learner 0's minibatch 0, and — through event_coef —
+    # coefficient 0 in the replay, so their gradient never contributes
+    rows = np.broadcast_to(np.arange(steps, dtype=np.int32)[:, None],
+                           (steps, W))
+    pulled = np.where(slot_on, pulled, rows)
+    pull_time = np.where(slot_on, pull_time, times[:, None])
     lrs, mode = resolve_trace_lrs(run, pulled)
     shard_ts = None
     if topo.shards > 1:
         shard_ts = _shard_pulled_ts(topo, run, pull_time, pulled, times)
+    valid, member_valid = _finish_masks(slot_on, mmask, gs)
     return ArrivalTrace(run.protocol, lam, learner, pulled, mb_idx,
-                        times, lrs, mode, topo, shard_ts)
+                        times, lrs, mode, topo, shard_ts,
+                        valid=valid, member_valid=member_valid)

@@ -13,14 +13,15 @@ instead of sequential replays; everything else falls back to per-spec
 :func:`run` semantics.  Results always come back in spec order and are
 identical to sequential execution (``tests/test_experiments.py``).
 
-``execute`` is the raw-callable escape hatch — the old
-``simulate_compiled`` / ``simulate_measure`` surfaces are deprecated shims
-over it — for callers with a hand-written ``grad_fn``/``batch_fn`` instead
-of a registered problem.
+``execute`` is the raw-callable escape hatch for callers with a
+hand-written ``grad_fn``/``batch_fn`` instead of a registered problem
+(the pre-PR-3 ``simulate_compiled`` / ``simulate_measure`` shims over it
+are gone — this and the spec surface are the only entry points).
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -89,7 +90,8 @@ def _staleness_stats(trace: ArrivalTrace, run_cfg: RunConfig) -> Dict:
 
 
 def _result(spec: ExperimentSpec, trace: ArrivalTrace,
-            sim: Optional[SimResult], problem) -> RunResult:
+            sim: Optional[SimResult], problem,
+            replay_path: str = "sequential") -> RunResult:
     metrics: Dict = {}
     curve: List[Dict] = []
     params = None
@@ -103,7 +105,13 @@ def _result(spec: ExperimentSpec, trace: ArrivalTrace,
         curve=curve,
         runtime={"simulated_time": trace.simulated_time,
                  "updates": trace.steps,
-                 "minibatches": trace.minibatches},
+                 "minibatches": trace.minibatches,
+                 # which execution path produced this record: "batched"
+                 # (one vmapped program over a sweep cell), "sequential"
+                 # (per-spec compiled replay), "legacy", or "measure" —
+                 # the sweep fast path is a ~3.6× cliff, so the record
+                 # says which side of it this run landed on
+                 "replay_path": replay_path},
         staleness=_staleness_stats(trace, spec.run),
         params=params,
         trace=trace,
@@ -143,25 +151,42 @@ class _Job:
         mb = np.broadcast_to(self.trace.mb_index[:, :, None], members.shape)
         return stage(members, mb, self.spec.run.minibatch)
 
-    def batch_key(self):
-        """Grid points with equal keys replay as one vmapped program:
-        same problem (⇒ same grad_fn/init/batch shapes), same trace shape
-        (steps, c), same optimizer event, same μ and eval schedule.
-        Sharded/grouped topologies replay per-spec (no vmapped lane
-        layout), so they never join a batch group."""
+    def batch_exclusion(self) -> Optional[str]:
+        """Why this compiled grid point can never join a vmapped batch
+        group — the ~3.6× sweep cliff ``run_sweep`` warns about — or None
+        when it is batch-eligible (measure/legacy jobs are also None: they
+        have no compiled fast path to fall off)."""
         if self.engine != "compiled" or self.problem is None:
             return None
         opt = spec_from_run(self.spec.run)
         if not opt.kernel_supported:
-            return None
+            return (f"optimizer {opt.optimizer!r} has no flat lane layout")
         if not self.trace.topology.is_trivial(self.spec.run.n_learners):
+            # covers elastic grouped traces too: member_valid masks only
+            # arise with group_size > 1, which is already non-trivial
+            return (f"non-trivial topology (shards="
+                    f"{self.spec.run.shards}, groups={self.spec.run.groups})")
+        return None
+
+    def batch_key(self):
+        """Grid points with equal keys replay as one vmapped program:
+        same problem (⇒ same grad_fn/init/batch shapes), same trace shape
+        (steps, c), same optimizer event, same μ, eval schedule, and
+        elasticity (masked elastic lanes batch together — the per-event
+        coefficients are lane data).  Sharded/grouped topologies replay
+        per-spec (no vmapped lane layout), so they never join a group."""
+        if (self.engine != "compiled" or self.problem is None
+                or self.batch_exclusion() is not None):
             return None
+        opt = spec_from_run(self.spec.run)
         return (id(self.problem), self.steps, self.trace.c, self.trace.mode,
-                opt, self.spec.run.minibatch, self.spec.eval_every)
+                opt, self.spec.run.minibatch, self.spec.eval_every,
+                self.trace.valid is not None)
 
     def run_single(self) -> RunResult:
         if self.engine == "measure":
-            return _result(self.spec, self.trace, None, None)
+            return _result(self.spec, self.trace, None, None,
+                           replay_path="measure")
         if self.engine == "legacy":
             sim = simulate(self.spec.run, steps=self.steps,
                            grad_fn=self.problem.grad_fn,
@@ -170,14 +195,16 @@ class _Job:
                            eval_fn=self.problem.eval_fn,
                            eval_every=self.spec.eval_every,
                            duration_sampler=self.spec.duration_sampler())
-            return _result(self.spec, self.trace, sim, self.problem)
+            return _result(self.spec, self.trace, sim, self.problem,
+                           replay_path="legacy")
         sim = replay(self.trace, self.spec.run,
                      grad_fn=self.problem.grad_fn,
                      init_params=self.problem.init,
                      batch_fn=self.batch_fn,
                      eval_fn=self.problem.eval_fn,
                      eval_every=self.spec.eval_every)
-        return _result(self.spec, self.trace, sim, self.problem)
+        return _result(self.spec, self.trace, sim, self.problem,
+                       replay_path="sequential")
 
 
 def run(spec: ExperimentSpec) -> RunResult:
@@ -192,6 +219,14 @@ def run_sweep(sweep: Union[Sweep, Sequence[ExperimentSpec]], *,
     ``batch=True`` (default) replays shape-compatible compiled grid points
     as one vmapped program per group; ``batch=False`` forces sequential
     per-spec execution (the equivalence oracle in tests/benchmarks).
+
+    Falling off the batched fast path is a ~3.6× per-spec cliff, so it is
+    never silent: compiled grid points that can't batch (non-kernel
+    optimizer, non-trivial topology — which includes elastic grouped
+    traces) raise ONE RuntimeWarning per sweep naming the reasons, and
+    every RunResult
+    records the path that produced it in ``runtime["replay_path"]``
+    ("batched" | "sequential" | "legacy" | "measure").
     """
     specs = list(sweep)
     jobs = [_Job(i, s) for i, s in enumerate(specs)]
@@ -199,10 +234,24 @@ def run_sweep(sweep: Union[Sweep, Sequence[ExperimentSpec]], *,
 
     groups: Dict = {}
     if batch:
+        reasons: Dict[str, int] = {}
         for job in jobs:
+            why = job.batch_exclusion()
+            if why is not None:
+                reasons[why] = reasons.get(why, 0) + 1
             key = job.batch_key()
             if key is not None:
                 groups.setdefault(key, []).append(job)
+        if reasons:
+            detail = "; ".join(f"{n} spec(s): {why}"
+                               for why, n in sorted(reasons.items()))
+            warnings.warn(
+                f"run_sweep: {sum(reasons.values())} of {len(jobs)} "
+                f"spec(s) fall back from the batched (vmapped) sweep path "
+                f"to sequential per-spec replay — {detail}. Sequential "
+                f"replay is ~3.6x slower per spec; see "
+                f"runtime['replay_path'] on each RunResult.",
+                RuntimeWarning, stacklevel=2)
 
     done = set()
     for key, members in groups.items():
@@ -222,7 +271,7 @@ def run_sweep(sweep: Union[Sweep, Sequence[ExperimentSpec]], *,
             eval_every=members[0].spec.eval_every)
         for job, sim in zip(members, sims):
             results[job.index] = _result(job.spec, job.trace, sim,
-                                         job.problem)
+                                         job.problem, replay_path="batched")
             done.add(job.index)
 
     for job in jobs:

@@ -18,7 +18,7 @@ every grid point shares the same ``grad_fn`` — the property that lets the
 driver vmap shape-compatible grid points through one compiled scan.
 
 ``mlp_teacher`` — the repo's CIFAR-scale stand-in (2-layer MLP on the
-teacher-classification task, DESIGN.md §10) — ships registered;
+teacher-classification task, DESIGN.md §11) — ships registered;
 :func:`register_problem` adds new ones (see ``tests/test_experiments.py``
 for a 4-line linear-regression example).
 """

@@ -7,7 +7,11 @@ One :class:`RunResult` per executed :class:`~repro.experiments.spec
 * ``metrics``   — final metric values (the problem's ``eval_fn`` keys);
 * ``curve``     — eval history rows ``{"update", "time", **metrics}``;
 * ``runtime``   — trace-derived runtime axis summary (simulated seconds of
-  the last update, updates, minibatches consumed);
+  the last update, updates, minibatches actually committed — an elastic
+  trace's cancelled pushes don't count — plus ``replay_path``: which
+  execution path produced the record, "batched" | "sequential" |
+  "legacy" | "measure", so the sweep fast-path cliff is visible in every
+  results file);
 * ``staleness`` — Fig.-4 statistics off the trace (⟨σ⟩, σ_max, P(σ > 2n),
   ring-buffer K, histogram, ⟨σ⟩-series head).
 

@@ -15,41 +15,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-from repro.config import RunConfig
+# The calibrated-duration grammar ("calibrated:<arch>[:<int>mb]") and its
+# parser live in repro.config — ONE parser and error message shared with
+# RunConfig.duration_model, which accepts the same strings (the two layers
+# used to disagree: the spec allowed "calibrated:base:300mb" while the
+# RunConfig one level down rejected it with a misleading message).
+from repro.config import (CALIBRATED_ARCHS, CALIBRATED_PREFIX,  # noqa: F401
+                          RunConfig, parse_calibrated)
 from repro.experiments.problems import get_problem, updates_for_epochs
 
 ENGINES = ("auto", "compiled", "legacy", "measure")
-
-# duration sources: "config" defers to RunConfig.duration_model (the
-# homogeneous / two_speed / pareto samplers in core/trace.py);
-# "calibrated:<arch>" plugs in the calibrated per-minibatch cost model of
-# core/tradeoff.py for arch ∈ {base, adv, adv*} so the trace clock IS the
-# paper's runtime axis.  An optional ":<int>mb" suffix overrides the
-# workload's model size (e.g. "calibrated:adv:300mb" — the paper's Table-1
-# adversarial scenario, where the architectures' communication structure
-# actually separates; the default CIFAR CNN is ~350 kB and comm-invisible).
-CALIBRATED_PREFIX = "calibrated:"
-CALIBRATED_ARCHS = ("base", "adv", "adv*")
-
-
-def _parse_calibrated(duration: str):
-    """'calibrated:<arch>[:<int>mb]' → (arch, model_bytes | None); raises
-    ValueError on anything else."""
-    parts = duration[len(CALIBRATED_PREFIX):].split(":")
-    err = ValueError(
-        f"duration must be 'config' or 'calibrated:<arch>[:<int>mb]' with "
-        f"arch in {CALIBRATED_ARCHS}, got {duration!r}")
-    if not duration.startswith(CALIBRATED_PREFIX) or len(parts) not in (1, 2):
-        raise err
-    arch = parts[0]
-    if arch not in CALIBRATED_ARCHS:
-        raise err
-    if len(parts) == 1:
-        return arch, None
-    size = parts[1]
-    if not (size.endswith("mb") and size[:-2].isdigit()):
-        raise err
-    return arch, float(size[:-2]) * 1e6
 
 
 def _as_arg_tuple(args) -> Tuple[Tuple[str, object], ...]:
@@ -89,7 +64,12 @@ class ExperimentSpec:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {self.engine!r}")
         if self.duration != "config":
-            _parse_calibrated(self.duration)
+            try:
+                parse_calibrated(self.duration)
+            except ValueError as e:
+                raise ValueError(
+                    f"duration must be 'config' or match the calibrated "
+                    f"grammar — {e}") from None
         if self.problem is None:
             if self.engine not in ("auto", "measure"):
                 raise ValueError("problem=None (measure mode) only runs on "
@@ -100,11 +80,14 @@ class ExperimentSpec:
         elif self.engine == "measure":
             raise ValueError("engine='measure' takes problem=None")
         if self.engine == "legacy" and (self.run.shards > 1
-                                        or self.run.group_size > 1):
+                                        or self.run.group_size > 1
+                                        or self.run.elastic
+                                        or self.run.backup):
             raise ValueError(
                 "engine='legacy' (the per-arrival host PS) models the flat "
-                "Rudra-base server only; sharded/grouped topologies "
-                "(shards/groups on RunConfig) replay on the compiled engine")
+                "static Rudra-base server only; sharded/grouped topologies "
+                "and elastic membership/backup (shards/groups/membership/"
+                "backup on RunConfig) replay on the compiled engine")
 
     def replace(self, **kw) -> "ExperimentSpec":
         """Copy with fields changed; validation re-runs (frozen contract)."""
@@ -141,7 +124,7 @@ class ExperimentSpec:
         if self.duration == "config":
             return None
         from repro.core import tradeoff as to
-        arch, model_bytes = _parse_calibrated(self.duration)
+        arch, model_bytes = parse_calibrated(self.duration)
         wl = to.WorkloadModel()
         if model_bytes is not None:
             wl = dataclasses.replace(wl, model_bytes=model_bytes)

@@ -10,10 +10,12 @@ The paper is a *systematic sweep* over (σ, μ, λ, protocol, LR policy); a
     results = run_sweep(sweep)
 
 Axis names resolve against ``RunConfig`` fields first (protocol, minibatch,
-n_learners, seed, base_lr, …), then against ``ExperimentSpec`` fields
-(steps, epochs, eval_every, …).  The special axis ``cases`` takes dicts of
-coupled field patches — e.g. the paper's (protocol, n_softsync, lr_policy)
-combinations that only make sense together:
+n_learners, seed, base_lr, …, including the elastic axes ``membership`` —
+:class:`~repro.membership.MembershipTimeline` values, tagged by their
+compact ``str()`` form — and ``backup``), then against ``ExperimentSpec``
+fields (steps, epochs, eval_every, …).  The special axis ``cases`` takes
+dicts of coupled field patches — e.g. the paper's (protocol, n_softsync,
+lr_policy) combinations that only make sense together:
 
     Sweep.over(base, cases=[
         {"protocol": "hardsync", "lr_policy": "sqrt_scale"},

@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the perf-critical compute layers (DESIGN.md §9):
+"""Pallas TPU kernels for the perf-critical compute layers (DESIGN.md §10):
 
 * ``ps_update``        — fused PS applyUpdate (the paper's hot-spot)
 * ``flash_attention``  — blockwise attention, causal/window tile skipping

@@ -1,6 +1,6 @@
 """Sharding policy: PartitionSpecs for parameters, inputs, caches.
 
-Two tensor-parallel modes, chosen per architecture (DESIGN.md §8):
+Two tensor-parallel modes, chosen per architecture (DESIGN.md §9):
 
 * **head-parallel** (``n_heads % model_axis == 0``, likewise for SSM/RWKV
   head counts): Megatron-style.  Attention Q/O sharded over heads (K/V

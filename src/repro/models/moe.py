@@ -1,6 +1,6 @@
 """Mixture-of-Experts with capacity-based scatter dispatch (GShard-style).
 
-TPU adaptation notes (DESIGN.md §8): experts are sharded over the ``model``
+TPU adaptation notes (DESIGN.md §9): experts are sharded over the ``model``
 mesh axis (expert parallelism); tokens are grouped so that the per-group
 dispatch buffers stay small and the dispatch crossing the data→model axes
 lowers to all-to-all-style collectives under GSPMD.

@@ -28,7 +28,7 @@ from repro.models.layers import rms_norm
 # ---------------------------------------------------------------------------
 def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
     """Parameter leaves are split on head boundaries so tensor parallelism
-    shards cleanly (DESIGN.md §8): w_z/w_x/w_dt and the per-head scalars
+    shards cleanly (DESIGN.md §9): w_z/w_x/w_dt and the per-head scalars
     shard channel/head dims over `model`; the small shared B/C projection and
     its conv stay replicated (B/C are shared across heads, n_groups = 1)."""
     M = cfg.d_model

@@ -65,7 +65,7 @@ def test_smoke_forward_shapes(arch):
 def test_smoke_decode_step(arch):
     cfg = get_smoke(arch)
     if cfg.encoder_only:
-        pytest.skip("encoder-only: no decode (DESIGN.md §7)")
+        pytest.skip("encoder-only: no decode (DESIGN.md §8)")
     params = init_model(cfg, jax.random.PRNGKey(0))
     caches = init_caches(cfg, B, 32)
     tok = jnp.zeros((B, 1), jnp.int32)

@@ -4,6 +4,7 @@ semantics tests against the event-queue machinery."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.config import RunConfig
 from repro.core.baselines import (simulate_accrual, simulate_easgd,
@@ -29,6 +30,7 @@ def _lsq():
     return W, X, Y, grad_fn, batch_fn
 
 
+@pytest.mark.slow   # long convergence loop; full lane
 def test_ssp_converges_and_blocks_under_stragglers():
     W, X, Y, grad_fn, batch_fn = _lsq()
     run = RunConfig(protocol="async", n_learners=8, minibatch=8,
@@ -49,6 +51,7 @@ def test_ssp_converges_and_blocks_under_stragglers():
     assert np.isfinite(float(jnp.mean((X @ res2.params - Y) ** 2)))
 
 
+@pytest.mark.slow   # long convergence loop; full lane
 def test_easgd_center_converges():
     W, X, Y, grad_fn, batch_fn = _lsq()
     run = RunConfig(protocol="async", n_learners=8, minibatch=8,

@@ -4,6 +4,7 @@ and trainability (guards the §4.2 architecture reproduction)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from benchmarks.cnn import ImageTeacher, cnn_forward, cnn_loss, init_cnn
 
@@ -25,6 +26,7 @@ def test_cnn_forward_shape_and_finite():
     assert float(jnp.std(logits)) < 3.0
 
 
+@pytest.mark.slow   # ~100s of CPU conv; the paper's own CNN vehicle runs in the full lane
 def test_cnn_learns_prototype_task():
     """Full-batch heavy-ball training halves the loss within 60 steps.
 

@@ -73,6 +73,7 @@ def test_batch_fn_layouts(arch):
         assert b["tokens"].shape == (2, 32)
 
 
+@pytest.mark.slow   # full bf16 state roundtrip; full lane
 def test_checkpoint_roundtrip_bf16():
     cfg = get_smoke("qwen2_1_5b")
     params = init_model(cfg, jax.random.PRNGKey(0))

@@ -1,0 +1,501 @@
+"""Elastic membership (DESIGN.md §7): join/leave/crash-restart timelines
+and backup-learner hardsync in the schedule/replay split.
+
+The pinned contract mirrors PR 4's trivial-topology degeneracy: a static
+timeline (empty, or with events that never fire inside the horizon)
+schedules the EXACT pre-elastic trace — same arrays, same rng draw order,
+no masks — deterministically and under hypothesis.  On top of that:
+crash/drop/restart semantics, the λ(t)-tracking n-softsync threshold,
+backup-hardsync cancellation (runtime strictly below b = 0 at equal
+updates), membership × groups survivor aggregation, masked replay
+invariance (cancelled slots cannot influence the result), the elastic
+batched-sweep path, and the loud legacy/validation error paths."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RunConfig
+from repro.core import (MembershipEvent, MembershipTimeline, replay,
+                        replay_batch, schedule)
+from repro.experiments import ExperimentSpec, Sweep, run, run_sweep
+from repro.membership import MembershipTimeline as TL
+
+
+def _trace_eq(a, b):
+    """Bitwise trace equality (the degeneracy pin)."""
+    assert a.protocol == b.protocol and a.n_learners == b.n_learners
+    np.testing.assert_array_equal(a.learner, b.learner)
+    np.testing.assert_array_equal(a.pulled_ts, b.pulled_ts)
+    np.testing.assert_array_equal(a.mb_index, b.mb_index)
+    np.testing.assert_array_equal(a.event_time, b.event_time)
+    np.testing.assert_array_equal(a.lrs, b.lrs)
+    assert a.mode == b.mode
+    assert (a.shard_pulled_ts is None) == (b.shard_pulled_ts is None)
+    if a.shard_pulled_ts is not None:
+        np.testing.assert_array_equal(a.shard_pulled_ts, b.shard_pulled_ts)
+    assert a.valid is None and b.valid is None
+    assert a.member_valid is None and b.member_valid is None
+
+
+def _cfg(**kw):
+    base = dict(protocol="softsync", n_softsync=2, n_learners=8,
+                minibatch=8, base_lr=0.05, lr_policy="staleness_inverse",
+                optimizer="momentum", seed=7)
+    base.update(kw)
+    return RunConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# timeline construction + validation
+# ---------------------------------------------------------------------------
+def test_timeline_normalizes_and_sorts():
+    tl = TL(((5.0, 1, "join"), (1.0, 0, "crash"),
+             {"t": 2.0, "learner": 0, "kind": "join"}))
+    assert [e.t for e in tl.events] == [1.0, 2.0, 5.0]
+    assert tl.events[0] == MembershipEvent(1.0, 0, "crash")
+    assert not tl.static and TL().static
+    assert str(TL()) == "static"
+    assert str(tl) == "2join+1crash"
+
+
+def test_timeline_validation_errors():
+    with pytest.raises(ValueError, match="kind"):
+        TL(((1.0, 0, "explode"),))
+    with pytest.raises(ValueError, match=">= 0"):
+        TL(((-1.0, 0, "crash"),))
+    with pytest.raises(ValueError, match="joins at"):
+        TL(((1.0, 0, "join"), (0.5, 0, "leave"),
+            (2.0, 0, "join"))).validate_for(4)
+    with pytest.raises(ValueError, match="while inactive"):
+        TL(((1.0, 0, "crash"), (2.0, 0, "leave"))).validate_for(4)
+    with pytest.raises(ValueError, match="n_learners"):
+        _cfg(membership=TL(((1.0, 9, "crash"),)))
+    # crash + same-instant join is a valid zero-delay restart
+    TL(((1.0, 0, "crash"), (1.0, 0, "join"))).validate_for(4)
+
+
+def test_timeline_initial_active():
+    tl = TL(((3.0, 2, "join"), (1.0, 0, "crash"), (9.0, 2, "leave")))
+    act = tl.initial_active(4)
+    np.testing.assert_array_equal(act, [True, True, False, True])
+
+
+def test_run_config_elastic_validation():
+    with pytest.raises(ValueError, match="hardsync"):
+        _cfg(backup=1)                       # backup needs hardsync
+    with pytest.raises(ValueError, match="at least one committed"):
+        RunConfig(protocol="hardsync", n_learners=4, backup=4)
+    with pytest.raises(ValueError, match="scalar lr_policy"):
+        _cfg(lr_policy="per_gradient",
+             membership=TL.crash_restart([0], 1.0, 1.0))
+    # raw event sequences coerce into a timeline
+    cfg = _cfg(membership=[(1.0, 0, "crash"), (2.0, 0, "join")])
+    assert isinstance(cfg.membership, MembershipTimeline)
+    assert cfg.elastic
+    assert not _cfg().elastic
+
+
+def test_backup_shrinks_gradients_per_update():
+    hard = RunConfig(protocol="hardsync", n_learners=8)
+    assert hard.gradients_per_update == 8
+    assert hard.replace(backup=3).gradients_per_update == 5
+    grouped = RunConfig(protocol="hardsync", n_learners=8, groups=4,
+                        backup=1)
+    assert grouped.gradients_per_update == 3    # P=4 pushers − b
+
+
+# ---------------------------------------------------------------------------
+# the pinned degeneracy: a static timeline IS the pre-elastic schedule
+# ---------------------------------------------------------------------------
+FAR = 1e9          # beyond any horizon these shapes reach
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                              # softsync
+    dict(protocol="async", n_softsync=1),                # async
+    dict(protocol="hardsync", n_softsync=1),             # hardsync
+    dict(groups=4),                                      # learner groups
+    dict(shards=3, shard_pull_jitter=0.05),              # sharded PS
+])
+def test_static_timeline_bitwise(kw):
+    """Events that never fire inside the horizon leave the trace
+    bit-identical to the empty timeline: same arrays, same rng draw
+    order, no masks."""
+    never = TL(((FAR, 0, "crash"), (FAR + 1.0, 0, "join"),
+                (FAR + 2.0, 3, "leave")))
+    a = schedule(_cfg(**kw), 60)
+    b = schedule(_cfg(**kw, membership=never), 60)
+    _trace_eq(a, b)
+
+
+def test_static_timeline_bitwise_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=15, derandomize=True)
+    @given(st.integers(0, 2**16),
+           st.sampled_from(["softsync", "hardsync", "async"]),
+           st.lists(st.tuples(st.floats(1e6, 1e9),
+                              st.integers(0, 5),
+                              st.sampled_from(["crash", "leave"])),
+                    max_size=4, unique_by=lambda e: e[1]))
+    def check(seed, protocol, far_events):
+        cfg = _cfg(protocol=protocol, n_learners=6,
+                   n_softsync=2 if protocol == "softsync" else 1, seed=seed)
+        a = schedule(cfg, 25)
+        b = schedule(cfg.replace(membership=TL(tuple(far_events))), 25)
+        _trace_eq(a, b)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# crash / restart / leave semantics (queue protocols)
+# ---------------------------------------------------------------------------
+def _slots_of(trace, pusher):
+    """(row, col) pairs of the pusher's committed slots."""
+    mask = trace.learner == pusher
+    if trace.valid is not None:
+        mask &= trace.valid
+    return np.argwhere(mask)
+
+
+def test_crash_drops_in_flight_and_restart_rejoins():
+    cfg = _cfg(n_softsync=1, seed=3)          # λ=8, c=8
+    dense = schedule(cfg, 30)
+    horizon = dense.simulated_time
+    crash_t, rejoin_t = 0.3 * horizon, 0.6 * horizon
+    tl = TL.crash_restart([2], crash_t, rejoin_t - crash_t)
+    tr = schedule(cfg.replace(membership=tl), 30)
+    assert tr.valid is not None
+    rows = np.arange(30)
+    # learner 2 commits nothing in the dead window...
+    for j, i in _slots_of(tr, 2):
+        assert not (crash_t <= tr.event_time[j] < rejoin_t) or \
+            tr.event_time[j] >= rejoin_t
+    # ...but does commit before the crash and after the restart
+    slot_times = np.array([tr.event_time[j] for j, _ in _slots_of(tr, 2)])
+    assert (slot_times < crash_t).any()
+    assert (slot_times >= rejoin_t).any()
+    # the restarted learner re-pulled: its first post-rejoin gradient is
+    # computed on weights no older than the rejoin-time timestamp
+    after = [(j, i) for j, i in _slots_of(tr, 2)
+             if tr.event_time[j] >= rejoin_t]
+    j0, i0 = after[0]
+    ts_at_rejoin = int(np.searchsorted(tr.event_time, rejoin_t))
+    assert tr.pulled_ts[j0, i0] >= ts_at_rejoin
+    # dropped push: learner 2 commits fewer slots than in the dense trace
+    assert len(_slots_of(tr, 2)) < len(_slots_of(dense, 2))
+    # masks are consistent: every row commits >= 1 slot, coef rows sum to 1
+    assert tr.valid.sum(axis=1).min() >= 1
+    np.testing.assert_allclose(tr.event_coef().sum(axis=1), 1.0, atol=1e-6)
+    assert tr.minibatches == int(tr.valid.sum())
+
+
+def test_leaves_shrink_softsync_threshold():
+    """Graceful leaves move λ(t), and the n-softsync splitting threshold
+    c(t) = ⌊P(t)/n⌋ follows: rows fired after half the cluster left are
+    half as wide."""
+    cfg = _cfg(seed=11)                       # λ=8, n=2 → c=4
+    tl = TL.leaves([4, 5, 6, 7], at=1.0)
+    tr = schedule(cfg.replace(membership=tl), 40)
+    widths = tr.valid.sum(axis=1)
+    assert tr.c == 4
+    late = tr.event_time > 10.0               # comfortably past the leave
+    assert (widths[late] == 2).all()          # ⌊4/2⌋
+    assert widths.max() == 4
+    # leavers never commit after their in-flight push lands
+    for p in (4, 5, 6, 7):
+        times = np.array([tr.event_time[j] for j, _ in _slots_of(tr, p)])
+        assert (times < 3.0).all()
+
+
+def test_cluster_death_raises():
+    tl = TL.crash_restart([0, 1, 2, 3], crash_at=1.0)   # no restart
+    cfg = RunConfig(protocol="softsync", n_softsync=1, n_learners=4,
+                    minibatch=8, seed=0, membership=tl)
+    with pytest.raises(ValueError, match="cluster died"):
+        schedule(cfg, 500)
+
+
+# ---------------------------------------------------------------------------
+# backup-learner hardsync (Chen et al.)
+# ---------------------------------------------------------------------------
+def test_backup_hardsync_commits_first_arrivals():
+    base = RunConfig(protocol="hardsync", n_learners=8, minibatch=8,
+                     seed=5)
+    t0 = schedule(base, 40)
+    prev = t0.simulated_time
+    for b in (1, 4):
+        tb = schedule(base.replace(backup=b), 40)
+        assert tb.c == 8 - b                 # dense rows of P − b commits
+        assert tb.valid is None
+        # same seed ⇒ same per-round draws; committing the (P−b)-th order
+        # statistic instead of the max is strictly faster every round
+        assert tb.simulated_time < prev
+        prev = tb.simulated_time
+        assert (tb.staleness == 0).all()     # still a barrier protocol
+        assert np.all(np.diff(tb.event_time) > 0)
+
+
+def test_backup_hardsync_round_times_are_order_statistics():
+    """b = P − 1 commits only the FASTEST arrival each round: round time
+    equals the per-round min of the same draws whose max is b = 0's."""
+    base = RunConfig(protocol="hardsync", n_learners=4, minibatch=8, seed=2)
+    t_all = schedule(base, 20)
+    t_min = schedule(base.replace(backup=3), 20)
+    d_all = np.diff(np.concatenate([[0.0], t_all.event_time]))
+    d_min = np.diff(np.concatenate([[0.0], t_min.event_time]))
+    assert (d_min < d_all).all()
+
+
+def test_hardsync_crash_mid_round_drops_contribution():
+    base = RunConfig(protocol="hardsync", n_learners=4, minibatch=8, seed=9)
+    dense = schedule(base, 10)
+    # crash learner 1 mid-first-round: it cannot commit round 0 and stays
+    # gone for every later barrier
+    tl = TL(((dense.event_time[0] * 0.5, 1, "crash"),))
+    tr = schedule(base.replace(membership=tl), 10)
+    assert tr.valid is not None
+    assert len(_slots_of(tr, 1)) == 0
+    assert (tr.valid.sum(axis=1) == 3).all()
+
+
+# ---------------------------------------------------------------------------
+# membership × groups: survivors aggregate
+# ---------------------------------------------------------------------------
+def test_grouped_crash_aggregates_over_survivors():
+    cfg = _cfg(groups=4, n_softsync=1, seed=13)          # gs=2, P=4, c=4
+    dense = schedule(cfg, 25)
+    crash_t = 0.4 * dense.simulated_time
+    tr = schedule(cfg.replace(
+        membership=TL(((crash_t, 1, "crash"),))), 25)
+    assert tr.member_valid is not None
+    mc = tr.member_coef()
+    slot_on = tr.valid if tr.valid is not None else \
+        np.ones(tr.pulled_ts.shape, bool)
+    # coefficient rows over surviving members always renormalize to 1
+    np.testing.assert_allclose(mc.sum(axis=2)[slot_on], 1.0, atol=1e-6)
+    # pusher 0 (learners 0, 1) keeps pushing via survivor 0: after the
+    # crash its slots carry member masks [True, False]
+    late = [(j, i) for j, i in _slots_of(tr, 0)
+            if tr.event_time[j] > crash_t + 2.0]
+    assert late, "group 0 should keep pushing via the survivor"
+    for j, i in late:
+        np.testing.assert_array_equal(tr.member_valid[j, i], [True, False])
+    # minibatches counts only surviving member gradients
+    assert tr.minibatches == int((tr.member_valid
+                                  & slot_on[:, :, None]).sum())
+
+
+def test_grouped_survivor_gradient_weighting_in_replay():
+    """Replay-level check of the survivor average: with grad(p, b) = b and
+    batch_fn(l, i) = const(l + 1), every event's folded gradient is
+    directly predictable from the trace masks."""
+    cfg = RunConfig(protocol="softsync", n_softsync=1, n_learners=4,
+                    groups=2, minibatch=4, base_lr=1.0, lr_policy="const",
+                    optimizer="sgd", seed=21,
+                    membership=TL(((0.9, 1, "crash"),)))
+    tr = schedule(cfg, 12)
+    assert tr.member_valid is not None
+    init = jnp.zeros((3,))
+    grad_fn = lambda p, b: b
+    batch_fn = lambda l, i: np.full(3, float(l + 1), np.float32)
+    sim = replay(tr, cfg, grad_fn=grad_fn, init_params=init,
+                 batch_fn=batch_fn)
+    members = tr.topology.members(4)[tr.learner]         # (steps, c, gs)
+    mvals = (members + 1.0)                              # member "gradients"
+    folded = (mvals * tr.member_coef()).sum(axis=2)      # survivor average
+    expect = -(folded * tr.event_coef()).sum(axis=1).sum()  # sgd, lr=1
+    np.testing.assert_allclose(np.asarray(sim.params),
+                               np.full(3, expect), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# masked replay: cancelled slots cannot influence the result
+# ---------------------------------------------------------------------------
+def test_masked_slots_are_inert_in_replay():
+    cfg = _cfg(n_softsync=1, seed=3, optimizer="momentum",
+               membership=TL.crash_restart([2, 5], 2.0, 3.0))
+    tr = schedule(cfg, 25)
+    assert tr.valid is not None
+    prob_init = jnp.ones((4, 2)) * 0.1
+
+    def grad_fn(p, b):
+        x, y = b
+        return jax.grad(lambda q: jnp.mean((x @ q - y) ** 2))(p)
+
+    def batch_fn(l, i):
+        rng = np.random.default_rng(l * 131 + i)
+        x = rng.normal(size=(6, 4)).astype(np.float32)
+        return x, (x @ np.ones((4, 2))).astype(np.float32)
+
+    ref = replay(tr, cfg, grad_fn=grad_fn, init_params=prob_init,
+                 batch_fn=batch_fn)
+    # re-point every cancelled slot at a DIFFERENT (learner, minibatch):
+    # with coefficient 0 the replay must not move by a single bit
+    learner2 = tr.learner.copy()
+    mb2 = tr.mb_index.copy()
+    learner2[~tr.valid] = 3
+    mb2[~tr.valid] = 77
+    tr2 = dataclasses.replace(tr, learner=learner2, mb_index=mb2)
+    alt = replay(tr2, cfg, grad_fn=grad_fn, init_params=prob_init,
+                 batch_fn=batch_fn)
+    np.testing.assert_array_equal(np.asarray(ref.params),
+                                  np.asarray(alt.params))
+
+
+def test_ghost_learner_equals_smaller_cluster():
+    """A learner that never joins is indistinguishable from a cluster
+    without it: λ=2 with learner 1 permanently absent replays to the same
+    parameters as λ=1 (same seed ⇒ same rng draws — the masked slot folds
+    an exact zero)."""
+    never = TL(((FAR, 1, "join"),))           # learner 1: inactive forever
+    two = RunConfig(protocol="softsync", n_softsync=1, n_learners=2,
+                    minibatch=4, base_lr=0.05, optimizer="momentum",
+                    seed=17, membership=never)
+    one = RunConfig(protocol="softsync", n_softsync=1, n_learners=1,
+                    minibatch=4, base_lr=0.05, optimizer="momentum",
+                    seed=17)
+    ta, tb = schedule(two, 20), schedule(one, 20)
+    assert ta.c == 2 and ta.valid is not None and tb.c == 1
+    np.testing.assert_array_equal(ta.learner[:, 0], tb.learner[:, 0])
+    np.testing.assert_array_equal(ta.pulled_ts[:, 0], tb.pulled_ts[:, 0])
+    np.testing.assert_array_equal(ta.event_time, tb.event_time)
+    init = jnp.ones((3, 2))
+
+    def grad_fn(p, b):
+        return jax.grad(lambda q: jnp.mean((b @ q) ** 2))(p)
+
+    def batch_fn(l, i):
+        return np.random.default_rng(l * 7 + i).normal(
+            size=(5, 3)).astype(np.float32)
+
+    ra = replay(ta, two, grad_fn=grad_fn, init_params=init,
+                batch_fn=batch_fn)
+    rb = replay(tb, one, grad_fn=grad_fn, init_params=init,
+                batch_fn=batch_fn)
+    np.testing.assert_allclose(np.asarray(ra.params),
+                               np.asarray(rb.params), rtol=0, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# experiment surface: spec / sweep / batched path
+# ---------------------------------------------------------------------------
+def _mlp_spec(**kw):
+    cfg = _cfg(n_learners=4, n_softsync=1, minibatch=4, **kw)
+    return ExperimentSpec(run=cfg, problem="mlp_teacher", steps=30)
+
+
+def test_membership_is_a_sweep_axis_and_batches():
+    churn = TL.crash_restart([1], 2.0, 2.0)
+    sweep = Sweep.over(_mlp_spec(), membership=[TL(), churn], seed=[0, 1])
+    specs = sweep.specs()
+    assert len(specs) == 4
+    assert "membership=static" in specs[0].tag
+    assert "membership=1join+1crash" in specs[2].tag
+    import warnings as _warnings
+    with _warnings.catch_warnings(record=True) as rec:
+        _warnings.simplefilter("always")
+        results = run_sweep(sweep)
+    assert not [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    # dense lanes batch together, elastic lanes batch together
+    assert [r.runtime["replay_path"] for r in results] == ["batched"] * 4
+    sequential = run_sweep(sweep, batch=False)
+    assert [r.runtime["replay_path"]
+            for r in sequential] == ["sequential"] * 4
+    for b, s in zip(results, sequential):
+        assert b.metrics["test_error"] == pytest.approx(
+            s.metrics["test_error"], abs=1e-5)
+    # the record round-trips with the timeline echoed in the spec
+    rec0 = results[2].record()
+    assert rec0["spec"]["run"]["membership"]["events"][0]["kind"] == "crash"
+    assert rec0["runtime"]["replay_path"] == "batched"
+    import json
+    json.dumps(rec0)
+
+
+def test_run_sweep_warns_and_records_fallback_path():
+    sweep = Sweep.over(_mlp_spec(optimizer="adamw"), seed=[0, 1])
+    with pytest.warns(RuntimeWarning, match="fall back"):
+        results = run_sweep(sweep)
+    assert [r.runtime["replay_path"] for r in results] == ["sequential"] * 2
+
+
+def test_measure_mode_elastic_staleness_stats():
+    churn = TL.crash_restart([0, 1], 3.0, 4.0)
+    spec = ExperimentSpec(run=_cfg(membership=churn), steps=60)
+    res = run(spec)
+    tr = schedule(spec.run, 60)
+    assert res.runtime["replay_path"] == "measure"
+    assert res.runtime["minibatches"] == tr.minibatches
+    assert res.staleness["mean"] == pytest.approx(
+        tr.clock_log().mean_staleness())
+
+
+def test_replay_batch_rejects_mixed_elasticity():
+    cfg_d = _cfg(n_softsync=1, seed=3)
+    cfg_e = cfg_d.replace(membership=TL.crash_restart([2], 2.0, 3.0))
+    td, te = schedule(cfg_d, 20), schedule(cfg_e, 20)
+    init = jnp.zeros((3,))
+    grad_fn = lambda p, b: b
+    bf = lambda l, i: np.zeros(3, np.float32)
+    with pytest.raises(ValueError, match="elasticity"):
+        replay_batch([td, te], [cfg_d, cfg_e], grad_fn=grad_fn,
+                     init_params=init, batch_fns=[bf, bf])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: schedule invariants under arbitrary small timelines
+# ---------------------------------------------------------------------------
+def test_elastic_schedule_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    events = st.lists(
+        st.tuples(st.floats(0.1, 30.0), st.integers(0, 5),
+                  st.sampled_from(["crash", "leave", "join"])),
+        max_size=6)
+
+    @settings(deadline=None, max_examples=25, derandomize=True)
+    @given(st.integers(0, 2**16), events,
+           st.sampled_from(["softsync", "async", "hardsync"]))
+    def check(seed, raw, protocol):
+        # keep only per-learner event sequences that alternate legally
+        state = {}
+        keep = []
+        for t, l, k in sorted(raw):
+            active = state.get(l, True)
+            if (k == "join") != active:
+                keep.append((t, l, k))
+                state[l] = k == "join"
+        cfg = _cfg(protocol=protocol,
+                   n_softsync=2 if protocol == "softsync" else 1,
+                   n_learners=6, seed=seed, membership=TL(tuple(keep)))
+        try:
+            tr = schedule(cfg, 20)
+        except ValueError as e:
+            assert "died" in str(e) or "crashed" in str(e)
+            return
+        W = cfg.gradients_per_update
+        assert tr.pulled_ts.shape == (20, W)
+        # clocks: nondecreasing event times, slots never from the future
+        assert (np.diff(tr.event_time) >= 0).all()
+        assert (tr.staleness >= 0).all()
+        if tr.valid is not None:
+            widths = tr.valid.sum(axis=1)
+            assert widths.min() >= 1 and widths.max() <= W
+            np.testing.assert_allclose(tr.event_coef().sum(axis=1), 1.0,
+                                       atol=1e-6)
+        assert tr.minibatches <= 20 * W * tr.group_size
+        # the Fig.-4 statistics stay finite and mask-consistent
+        vals = tr.clock_log().all_staleness_values()
+        expect = (int(tr.valid.sum()) if tr.valid is not None
+                  else 20 * W)
+        assert len(vals) == expect
+
+    check()

@@ -3,7 +3,8 @@ RunResult.  Pins the three ISSUE-3 contracts — (a) run(spec) ≡ hand-wired
 schedule+replay bit-for-bit, (b) vmapped batch replay ≡ sequential replay
 across a protocol × seed grid, (c) RunResult JSON round-trip — plus the
 Sweep grid builder, the problem registry, vectorized staging, RunConfig
-.replace validation, and the deprecated core shims."""
+.replace validation, the unified duration grammar, and the legacy-engine
+rejection paths (the deprecated core shims are gone)."""
 
 import dataclasses
 import json
@@ -334,18 +335,67 @@ def test_validate_cli_fails_loudly_on_missing_or_empty(tmp_path):
     assert main([str(empty)]) == 0
 
 
-def test_deprecated_shims_still_work():
-    from repro.core import simulate_compiled, simulate_measure
-    cfg = RunConfig(protocol="softsync", n_softsync=2, n_learners=4,
-                    minibatch=8, seed=1)
-    with pytest.deprecated_call():
-        meas = simulate_measure(cfg, steps=50)
-    tr = schedule(cfg, 50)
-    assert meas.simulated_time == tr.simulated_time
+def test_deprecated_shims_are_gone():
+    """The PR-3 shims were deprecated one release and are now removed;
+    the experiment surface / driver.execute are the only entry points."""
+    import repro.core as core
+    import repro.core.engine as engine
+    import repro.core.simulator as simulator
+    for mod in (core, engine, simulator):
+        assert not hasattr(mod, "simulate_compiled")
+        assert not hasattr(mod, "simulate_measure")
+
+
+def test_legacy_engine_rejects_nonflat_configs():
+    """The legacy per-arrival loop models the flat static Rudra-base
+    server: topology / elastic membership / backup configs must be
+    rejected loudly, never silently run on the flat static path."""
+    from repro.core import MembershipTimeline, simulate
     prob = get_problem("linreg_test")
-    with pytest.deprecated_call():
-        sim = simulate_compiled(
-            cfg.replace(base_lr=0.05, optimizer="sgd"), steps=20,
-            grad_fn=prob.grad_fn, init_params=prob.init,
-            batch_fn=prob.batch_fn_for(8))
-    assert np.isfinite(np.asarray(sim.params)).all()
+    kw = dict(steps=5, grad_fn=prob.grad_fn, init_params=prob.init,
+              batch_fn=prob.batch_fn_for(8))
+    churn = MembershipTimeline.crash_restart([0], 1.0, 2.0)
+    base = dict(protocol="softsync", n_softsync=2, n_learners=4,
+                minibatch=8, seed=1)
+    with pytest.raises(ValueError, match="core.engine"):
+        simulate(RunConfig(**base, membership=churn), **kw)
+    with pytest.raises(ValueError, match="core.engine"):
+        simulate(RunConfig(protocol="hardsync", n_learners=4, minibatch=8,
+                           backup=1), **kw)
+    with pytest.raises(ValueError, match="core.engine"):
+        simulate(RunConfig(**base, shards=2), **kw)
+    # the same configs are rejected at spec level for engine="legacy"
+    with pytest.raises(ValueError, match="legacy"):
+        ExperimentSpec(run=RunConfig(**base, membership=churn),
+                       problem="linreg_test", steps=5, engine="legacy")
+    with pytest.raises(ValueError, match="legacy"):
+        ExperimentSpec(run=RunConfig(protocol="hardsync", n_learners=4,
+                                     minibatch=8, backup=1),
+                       problem="linreg_test", steps=5, engine="legacy")
+    # measure mode (no gradients) IS the schedule pass — elastic is fine
+    from repro.core.simulator import simulate as sim_fn
+    res = sim_fn(RunConfig(**base, membership=churn), steps=20)
+    assert res.updates == 20
+
+
+def test_duration_model_grammar_unified():
+    """RunConfig.duration_model accepts the same calibrated grammar as
+    ExperimentSpec.duration (one shared parser), and rejects junk with a
+    message that names both grammars."""
+    cfg = RunConfig(duration_model="calibrated:base:300mb")
+    assert cfg.duration_model == "calibrated:base:300mb"
+    from repro.core.trace import make_duration_sampler
+    sampler = make_duration_sampler(cfg)
+    d = sampler(np.random.default_rng(0), 4, 0)
+    assert d > 0
+    with pytest.raises(ValueError, match="calibrated:<arch>"):
+        RunConfig(duration_model="calibrated:mega")
+    with pytest.raises(ValueError, match="calibrated:<arch>"):
+        RunConfig(duration_model="warp_speed")
+    with pytest.raises(ValueError, match="calibrated:<arch>"):
+        ExperimentSpec(problem="linreg_test", steps=5,
+                       duration="calibrated:base:300gb")
+    # spec-level calibrated strings still parse (and agree with RunConfig)
+    spec = ExperimentSpec(problem="linreg_test", steps=5,
+                          duration="calibrated:adv:300mb")
+    assert spec.duration_sampler() is not None

@@ -29,6 +29,7 @@ def _cfg(**kw):
                 n_kv_heads=0, d_ff=96, vocab_size=64,
                 block_pattern=("rwkv",), rwkv_head_dim=16),
 ], ids=["dense", "sliding-window", "rwkv"])
+@pytest.mark.slow   # 3-arch decode parity sweep (~30s); full lane
 def test_continuous_batching_matches_single_request(cfg):
     params = init_model(cfg, jax.random.PRNGKey(0))
     prompts = [[3, 14, 15, 9], [26, 5], [35, 8, 9, 7, 9, 3]]
@@ -46,6 +47,7 @@ def test_continuous_batching_matches_single_request(cfg):
                                                 want[i])
 
 
+@pytest.mark.slow   # long decode drain; full lane
 def test_slots_reused_and_queue_drains():
     cfg = _cfg()
     params = init_model(cfg, jax.random.PRNGKey(0))
@@ -56,6 +58,7 @@ def test_slots_reused_and_queue_drains():
     assert all(len(done[r].generated) == 3 for r in rids)
 
 
+@pytest.mark.slow   # decode parity; full lane
 def test_staggered_admission_does_not_change_outputs():
     """A request admitted mid-flight (other slots at different depths) must
     produce the same tokens as when it runs alone."""

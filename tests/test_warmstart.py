@@ -2,6 +2,7 @@
 AdaGrad as the softsync stabilizer (the paper's ImageNet recipe)."""
 
 import numpy as np
+import pytest
 
 from repro.config import ModelConfig, RunConfig
 from repro.train.loop import train
@@ -10,6 +11,7 @@ CFG = ModelConfig(name="w", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
 
 
+@pytest.mark.slow   # two-phase training run; full lane
 def test_warmstart_runs_and_learns():
     run = RunConfig(protocol="softsync", n_softsync=4, n_learners=4,
                     minibatch=2, base_lr=0.02, lr_policy="staleness_inverse",
