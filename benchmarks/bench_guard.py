@@ -23,6 +23,10 @@ Guarded metrics:
   timeline (crash-restarts + leaves).  Absolute, wide margin like the
   compiled throughput: catches the schedule pass collapsing (e.g. the
   threshold refresh going quadratic), not runner noise.
+* ``megakernel_vs_xla_ratio``  — fused megakernel scan body vs the stock
+  XLA chain on the same trace + staged batches (DESIGN.md §12).
+  Machine-relative; fails if the default replay path regresses vs what
+  plain XLA delivers.
 
 Fresh measurements land in ``benchmarks/results/bench_guard.json`` (the CI
 job uploads it as a workflow artifact).  To demonstrate the gate trips:
@@ -42,7 +46,8 @@ import os
 import sys
 
 from benchmarks.common import emit, save_results
-from benchmarks.sim_engine_bench import _bench_one, _bench_sweep
+from benchmarks.sim_engine_bench import (_bench_megakernel, _bench_one,
+                                         _bench_sweep)
 from repro.config import RunConfig
 from repro.membership import MembershipTimeline
 
@@ -56,13 +61,20 @@ FLOOR_MARGINS = {
     "engine_speedup": 0.55,
     "batched_sweep_speedup": 0.55,
     "elastic_schedule_updates_per_s": 0.25,
+    # megakernel scan body vs the stock XLA chain on the same trace +
+    # staged batches (machine-relative; ~1.0 on CPU where the fused body's
+    # win is donation/memory, not FLOPs) — fails if the megakernel path
+    # ever regresses the hot loop vs what plain XLA delivers
+    "megakernel_vs_xla_ratio": 0.55,
 }
 
 
 def _bench_elastic_schedule(updates: int = 600, repeats: int = 3) -> dict:
     """Host-side wall clock of ``schedule()`` with a churny membership
     timeline (the membership-resolution pass: event interleaving, dropped
-    pushes, λ(t) threshold refreshes, mask assembly)."""
+    pushes, λ(t) threshold refreshes, mask assembly).  Deliberately calls
+    the UNCACHED ``schedule`` — ``schedule_cached`` would return the same
+    trace object after the first repeat and time a dict lookup."""
     import time
 
     from repro.core.trace import schedule
@@ -92,16 +104,19 @@ def measure() -> dict:
     row = _bench_one(cfg, updates=48, repeats=3)
     sweep = _bench_sweep(updates=30, lam=16, seeds=3, repeats=3)
     elastic = _bench_elastic_schedule()
+    mk = _bench_megakernel(updates=48, lam=16, repeats=3)
     return {
         "metrics": {
             "compiled_updates_per_s": row["compiled_updates_per_s"],
             "engine_speedup": row["speedup"],
             "batched_sweep_speedup": sweep["speedup"],
             "elastic_schedule_updates_per_s": elastic["updates_per_s"],
+            "megakernel_vs_xla_ratio": mk["megakernel_vs_xla_ratio"],
         },
         "engine_cell": row,
         "sweep_cell": sweep,
         "elastic_schedule_cell": elastic,
+        "megakernel_cell": mk,
     }
 
 

@@ -136,6 +136,75 @@ def run() -> dict:
     emit("kernel/ps_update_fused", f"{t_fused:.0f}us",
          f"single pallas dispatch, allclose={match}")
 
+    # --- replay megakernel: ring event vs stock chain (DESIGN.md §12) ------
+    # One fused ring-read -> combine -> optimizer update -> ring-write event
+    # (kernels/replay_ring, interpret mode on CPU) vs the stock XLA chain
+    # the replay scan used before: gather row, apply_event_flat, .at[].set.
+    # Also times the bf16 compressed ring with its error-feedback residue
+    # (half the ring HBM traffic; the fp32 master chain stays exact).
+    from repro.kernels import replay_ring
+    from repro.optim import apply_event_flat
+    spec_mk = UpdateSpec(optimizer="momentum")
+    Kr, cr = 8, 8
+    Dr = replay_ring.padded_width(1 << 18)
+    ring0 = jax.random.normal(ks[4], (Kr, Dr), jnp.float32)
+    s_mk = jnp.zeros((Dr,))
+    g_mk = jax.random.normal(ks[5], (cr, Dr)) * 0.1
+    coef_mk = jnp.full((cr,), 1.0 / cr)
+    lrs_mk = jnp.full((cr,), 0.05)
+    idx_mk = jnp.array([2, 3], jnp.int32)
+
+    @jax.jit
+    def stock_event(ring, s):
+        w, s2 = apply_event_flat(spec_mk, ring[2], s, g_mk, coef_mk, lrs_mk,
+                                 "combine")
+        return ring.at[3].set(w), s2
+
+    @jax.jit
+    def mega_event(ring, s):
+        ring2, s2, _ = replay_ring.ring_apply(
+            ring, s, None, g_mk, coef_mk, lrs_mk, idx_mk,
+            spec=spec_mk, mode="combine")
+        return ring2, s2
+
+    rs_, ss_ = stock_event(ring0, s_mk)
+    rm_, sm_ = mega_event(ring0, s_mk)
+    mk_bitwise = bool((rs_ == rm_).all() and (ss_ == sm_).all())
+    t_stock = _time(stock_event, ring0, s_mk)
+    t_mega = _time(mega_event, ring0, s_mk)
+
+    ring_bf = ring0.astype(jnp.bfloat16)
+    res0 = (ring0[2] - ring_bf[2].astype(jnp.float32))
+
+    @jax.jit
+    def mega_event_bf16(ring, s, res):
+        return replay_ring.ring_apply(
+            ring, s, res, g_mk, coef_mk, lrs_mk, idx_mk,
+            spec=spec_mk, mode="combine")
+    rb_, sb_, resb_ = mega_event_bf16(ring_bf, s_mk, res0)
+    # master chain: bf16 row + residue reconstructs the exact fp32 update
+    master = rb_[3].astype(jnp.float32) + resb_
+    bf16_exact = bool((master == rs_[3]).all())
+    t_bf16 = _time(mega_event_bf16, ring_bf, s_mk, res0)
+
+    from repro.launch.roofline import ring_bytes as _ring_bytes
+    out["replay_megakernel"] = {
+        "D": Dr, "K": Kr, "c": cr,
+        "stock_us": t_stock, "megakernel_us": t_mega, "bf16_us": t_bf16,
+        "fp32_bitwise": mk_bitwise, "bf16_master_exact": bf16_exact,
+        "ring_bytes_fp32": _ring_bytes(Kr, Dr, "fp32",
+                                       "momentum")["total_bytes"],
+        "ring_bytes_bf16": _ring_bytes(Kr, Dr, "bf16",
+                                       "momentum")["total_bytes"],
+        "note": "CPU interpret-mode wall clock; the TPU win is one kernel "
+                "launch + K*D ring traffic halved at bf16"}
+    emit("kernel/replay_megakernel_fp32", f"{t_mega:.0f}us",
+         f"stock={t_stock:.0f}us bitwise={mk_bitwise} D=2^18 c={cr} K={Kr}")
+    emit("kernel/replay_megakernel_bf16", f"{t_bf16:.0f}us",
+         f"master_exact={bf16_exact} ring_bytes "
+         f"{out['replay_megakernel']['ring_bytes_fp32']}"
+         f"->{out['replay_megakernel']['ring_bytes_bf16']}")
+
     save_json("kernel_bench", out)
     return out
 

@@ -34,6 +34,7 @@ BENCHES = [
     ("elastic", "benchmarks.elastic_churn"),  # churn + backup-hardsync curves
     ("bench_guard", "benchmarks.bench_guard"),    # CI perf floor gate
     ("baselines", "benchmarks.baselines"),   # paper sec-6 related work + sec-3.3 accrual
+    ("ring", "benchmarks.ring_feasibility"),  # what-if max-feasible-D limit study (~5 min)
     ("cnn", "benchmarks.cnn"),               # Fig-5 on the paper's own CNN (~9 min)
 ]
 
@@ -52,8 +53,8 @@ def main() -> None:
     for bid, module in BENCHES:
         if only and bid not in only:
             continue
-        if args.quick and bid == "cnn":
-            continue   # ~9 min of CPU conv; run explicitly or without --quick
+        if args.quick and bid in ("cnn", "ring"):
+            continue   # minutes-long cells; run explicitly or without --quick
         mod = __import__(module, fromlist=["run"])
         t0 = time.time()
         kwargs = {}

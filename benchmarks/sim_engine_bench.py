@@ -41,9 +41,11 @@ from benchmarks.common import emit, save_results
 from repro.config import RunConfig
 from repro.experiments import ExperimentSpec, Sweep, run_sweep
 from repro.experiments import run as run_spec
+from repro.launch.roofline import ring_bytes
 
 LAMBDAS = (8, 32, 128)
 MU = 4
+MLP_D = 2762                    # mlp_teacher flat parameter count
 
 
 def _wait(res):
@@ -77,17 +79,20 @@ def _bench_one(cfg: RunConfig, updates: int, warm_updates: int = 4,
     drift = float(jnp.max(jnp.abs(
         jnp.asarray(legacy.params["w2"]) -
         jnp.asarray(compiled.params["w2"]))))
+    K = compiled.staleness["ring_buffer_K"]
     return {
         "lambda": cfg.n_learners,
         "n_softsync": cfg.n_softsync,
         "c": cfg.gradients_per_update,
-        "ring_buffer_K": compiled.staleness["ring_buffer_K"],
+        "ring_buffer_K": K,
         "updates": updates,
         "legacy_updates_per_s": updates / t_legacy,
         "compiled_updates_per_s": updates / t_replay,
         "speedup": t_legacy / t_replay,
         "compile_s": t_compile,
         "max_param_drift": drift,
+        "ring_bytes_total": ring_bytes(
+            K, MLP_D, cfg.ring_dtype, cfg.optimizer)["total_bytes"],
     }
 
 
@@ -132,6 +137,94 @@ def _bench_sweep(updates: int = 60, lam: int = 32, mu: int = 1,
     }
 
 
+def _bench_megakernel(updates: int = 96, lam: int = 32,
+                      repeats: int = 5) -> dict:
+    """Megakernel scan body vs the stock XLA gather/assemble/slice chain on
+    the same trace and staged batches (DESIGN.md §12): both sides go
+    through the driver's cached-trace + staged-minibatch path, so the
+    ratio isolates the scan-body change — the fused read-update-write
+    event with a donated (ring, state, residue) carry vs the undonated
+    ``.at[slot].set`` chain.  Also times the bf16 compressed ring (same
+    event count, half the ring bytes, error-feedback residue carried)."""
+    def cell(**kw):
+        cfg = RunConfig(protocol="softsync", n_softsync=1, n_learners=lam,
+                        minibatch=MU, base_lr=0.05,
+                        lr_policy="staleness_inverse", optimizer="momentum",
+                        seed=17, **kw)
+        return ExperimentSpec(run=cfg, problem="mlp_teacher", steps=updates)
+
+    rows = {}
+    ref = None
+    for label, kw in (("xla_stock", {"ring_impl": "stock"}),
+                      ("megakernel", {"ring_impl": "fused"}),
+                      ("megakernel_bf16", {"ring_impl": "fused",
+                                           "ring_dtype": "bf16"})):
+        spec = cell(**kw)
+        _wait(run_spec(spec))                               # compile + warm
+        t, res = _best_of(lambda s=spec: _wait(run_spec(s)), repeats)
+        K = res.staleness["ring_buffer_K"]
+        rows[label] = {
+            "updates_per_s": updates / t,
+            "seconds": t,
+            "ring_bytes_total": ring_bytes(
+                K, MLP_D, spec.run.ring_dtype,
+                spec.run.optimizer)["total_bytes"],
+            "max_param_drift": (0.0 if ref is None else float(jnp.max(
+                jnp.abs(jnp.asarray(ref.params["w2"]) -
+                        jnp.asarray(res.params["w2"]))))),
+        }
+        if ref is None:
+            ref = res
+    out = {
+        "protocol_shape": f"1-softsync lam={lam} c={lam} mu={MU}",
+        "updates": updates,
+        **{f"{k}_{m}": v for k, row in rows.items() for m, v in row.items()},
+        "megakernel_vs_xla_ratio": (rows["megakernel"]["updates_per_s"]
+                                    / rows["xla_stock"]["updates_per_s"]),
+        "bf16_ring_bytes_saved": (rows["megakernel"]["ring_bytes_total"]
+                                  - rows["megakernel_bf16"]
+                                  ["ring_bytes_total"]),
+    }
+    return out
+
+
+def _bench_whatif(updates: int = 96, d: int = 1_000_000,
+                  repeats: int = 3) -> dict:
+    """The what-if replay (in-kernel closed-form gradients, no staged
+    data) vs the staged-gradient stock path on the same quadratic problem
+    and trace.  Wall clock is ~parity (same FLOPs either way on CPU); the
+    win is PEAK MEMORY — no (c, D) pulled/gradient matrices, a donated
+    ring carry — which is what runs at ``configs/`` big-model D (the
+    ``benchmarks/ring_feasibility.py`` limit study)."""
+    cfg = RunConfig(protocol="softsync", n_softsync=2, n_learners=8,
+                    minibatch=1, base_lr=0.02, optimizer="momentum", seed=11)
+    args = (("d", d),)
+    whatif = ExperimentSpec(run=cfg, problem="quadratic_whatif",
+                            problem_args=args, steps=updates)
+    stock = whatif.replace(run=cfg.replace(ring_impl="stock"))
+
+    def wait_q(res):
+        jnp.asarray(res.params["w"]).block_until_ready()
+        return res
+
+    wait_q(run_spec(whatif))
+    t_whatif, rw = _best_of(lambda: wait_q(run_spec(whatif)), repeats)
+    wait_q(run_spec(stock))
+    t_stock, rs = _best_of(lambda: wait_q(run_spec(stock)), repeats)
+    K = rw.staleness["ring_buffer_K"]
+    drift = float(jnp.max(jnp.abs(jnp.asarray(rw.params["w"]) -
+                                  jnp.asarray(rs.params["w"]))))
+    return {
+        "d": d, "updates": updates, "ring_buffer_K": K,
+        "whatif_updates_per_s": updates / t_whatif,
+        "staged_stock_updates_per_s": updates / t_stock,
+        "vs_staged_ratio": t_stock / t_whatif,
+        "max_param_drift": drift,
+        "ring_bytes_total": ring_bytes(
+            K, d, cfg.ring_dtype, cfg.optimizer)["total_bytes"],
+    }
+
+
 def run_bench(updates: int = 480) -> dict:
     out = {}
     for lam in LAMBDAS:
@@ -158,6 +251,26 @@ def run_bench(updates: int = 480) -> dict:
          f"batched={sweep_row['batched_s']:.2f}s",
          f"speedup={sweep_row['speedup']:.1f}x "
          f"drift={sweep_row['max_param_drift']:.1e}")
+    mk_row = _bench_megakernel(updates=max(24, updates // 5))
+    out["megakernel_vs_xla"] = mk_row
+    emit("sim_engine/megakernel_vs_xla",
+         f"megakernel={mk_row['megakernel_updates_per_s']:.1f}up/s "
+         f"xla={mk_row['xla_stock_updates_per_s']:.1f}up/s",
+         f"ratio={mk_row['megakernel_vs_xla_ratio']:.2f}x "
+         f"drift={mk_row['megakernel_max_param_drift']:.1e}")
+    emit("sim_engine/megakernel_bf16_ring",
+         f"{mk_row['megakernel_bf16_updates_per_s']:.1f}up/s",
+         f"ring_bytes={mk_row['megakernel_bf16_ring_bytes_total']} "
+         f"(saves {mk_row['bf16_ring_bytes_saved']}) "
+         f"drift={mk_row['megakernel_bf16_max_param_drift']:.1e}")
+    whatif_row = _bench_whatif(updates=max(24, updates // 5))
+    out["whatif_quadratic"] = whatif_row
+    emit("sim_engine/whatif_quadratic",
+         f"{whatif_row['whatif_updates_per_s']:.1f}up/s at "
+         f"D={whatif_row['d']}",
+         f"staged={whatif_row['staged_stock_updates_per_s']:.1f}up/s "
+         f"ratio={whatif_row['vs_staged_ratio']:.2f}x "
+         f"ring={whatif_row['ring_bytes_total']/1e6:.0f}MB")
     save_results("sim_engine_bench", derived=out)
     return out
 

@@ -150,10 +150,18 @@ def run(epochs: int = 10) -> dict:
         out["sim_engine"] = rows
         for key, r in sorted(rows.items()):
             if "compiled_updates_per_s" in r:
+                ring = (f" ring={r['ring_bytes_total'] / 1e6:.1f}MB"
+                        if "ring_bytes_total" in r else "")
                 emit(f"summary/sim_engine/{key}",
                      f"{r['compiled_updates_per_s']:.0f}up/s",
                      f"legacy={r['legacy_updates_per_s']:.0f} "
-                     f"speedup={r['speedup']:.1f}x")
+                     f"speedup={r['speedup']:.1f}x" + ring)
+            elif "megakernel_vs_xla_ratio" in r:
+                emit(f"summary/sim_engine/{key}",
+                     f"{r['megakernel_updates_per_s']:.0f}up/s",
+                     f"vs_xla={r['megakernel_vs_xla_ratio']:.2f}x "
+                     f"bf16_ring_saves="
+                     f"{r['bf16_ring_bytes_saved'] / 1e6:.1f}MB")
             elif "batched_s" in r:
                 emit(f"summary/sim_engine/{key}",
                      f"{r['runs']}-run sweep {r['batched_s']:.2f}s batched",

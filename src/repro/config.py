@@ -24,6 +24,11 @@ import math
 from typing import Optional, Sequence, Tuple
 
 from repro.membership import MembershipTimeline
+from repro.optim.spec import KERNEL_OPTIMIZERS
+
+# replay weight-ring knobs (core/engine.py compiled replay, DESIGN.md §12)
+RING_DTYPES = ("fp32", "bf16")
+RING_IMPLS = ("auto", "pallas", "fused", "stock")
 
 # ---------------------------------------------------------------------------
 # Block types that can appear inside a repeating unit.
@@ -344,6 +349,17 @@ class RunConfig:
     shards: int = 1
     groups: int = 0
     shard_pull_jitter: float = 0.0
+    # --- replay weight ring (compiled simulator hot loop; DESIGN.md §12) ----
+    # ring_dtype: storage dtype of the (K, D) snapshot ring.  "bf16" halves
+    # ring bytes and carries an fp32 error-feedback residue so the master
+    # weight chain stays exactly the fp32 trajectory — the only
+    # approximation is gradients being evaluated at quantized snapshots.
+    # ring_impl: which scan body executes an update event — "auto" (Pallas
+    # replay megakernel on TPU, its fused jnp twin elsewhere) or a forced
+    # "pallas" / "fused" / "stock" ("stock" is the pre-megakernel
+    # gather→update→set chain, the bitwise baseline; fp32 only).
+    ring_dtype: str = "fp32"
+    ring_impl: str = "auto"
     # --- elastic membership (repro.membership; core/trace schedule pass) ----
     # membership: join/leave/crash-restart events per learner.  Resolves
     # entirely at schedule time: joins/leaves move the effective λ(t) that
@@ -410,6 +426,23 @@ class RunConfig:
             raise ValueError(
                 f"backup={self.backup} must leave at least one committed "
                 f"arrival per round (P = {self.n_pushers} pushers)")
+        if self.ring_dtype not in RING_DTYPES:
+            raise ValueError(f"unknown ring_dtype {self.ring_dtype!r}: "
+                             f"expected one of {RING_DTYPES}")
+        if self.ring_impl not in RING_IMPLS:
+            raise ValueError(f"unknown ring_impl {self.ring_impl!r}: "
+                             f"expected one of {RING_IMPLS}")
+        if self.ring_dtype == "bf16":
+            if self.ring_impl == "stock":
+                raise ValueError(
+                    "ring_dtype='bf16' needs the fused megakernel scan body "
+                    "to carry the error-feedback residue; ring_impl='stock' "
+                    "keeps the fp32 ring (use 'auto', 'fused' or 'pallas')")
+            if self.optimizer not in KERNEL_OPTIMIZERS:
+                raise ValueError(
+                    f"ring_dtype='bf16' requires a kernel-supported "
+                    f"optimizer {KERNEL_OPTIMIZERS}; {self.optimizer!r} "
+                    f"replays on the pytree path with an fp32 ring")
         if self.elastic and self.lr_policy == "per_gradient":
             raise ValueError(
                 "per_gradient LRs imply sequential optimizer events, which "

@@ -60,7 +60,9 @@ def _unstack_tree(tree, c: int):
 def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
                   layout: flatten.TreeLayout, batched: bool = False,
                   shards: int = 1, group_size: int = 1,
-                  masked: bool = False, member_masked: bool = False):
+                  masked: bool = False, member_masked: bool = False,
+                  ring_impl: str = "stock", ring_dtype: str = "fp32",
+                  whatif: bool = False):
     """The jitted scan over update events — cached per static config so
     repeated replays (benchmark/sweep loops) reuse the compiled program;
     the LRU bound keeps long-lived processes from pinning every grad_fn
@@ -106,6 +108,36 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
     the difference between the batched scan keeping the (B, K, D) ring in
     place and copying it every event.  Only ``ts`` (which snapshots each
     lane's c gradients read), ``lrs``, and the minibatches are per-lane.
+
+    Ring scan bodies (DESIGN.md §12) — ``ring_impl`` selects how a
+    kernel-supported event executes:
+
+    * ``stock``  — the original gather → ``apply_event_flat`` →
+      ``.at[slot].set`` chain (the bitwise baseline; adamw always lands
+      here via its pytree body).
+    * ``fused``  — ``optim.apply_event_ring``: the same math phrased as
+      ONE fused read-update-write over a flat (K, Dp) ring (bitwise-equal
+      to stock at fp32), plus the bf16 error-feedback residue when
+      ``ring_dtype == "bf16"``.  Sharded traces unify onto the flat padded
+      buffer: the per-shard structure only matters for the *gather* (each
+      slot assembles per-shard rows at per-shard timestamps); the update
+      itself is elementwise, so one fused event over the (K, S·Dp) buffer
+      computes the same values as the stacked per-shard applies.  Bitwise
+      it matches the flat ``apply_event_flat`` reference — the *stock
+      sharded* body phrases the combine einsum on (S, c, Dp) operands,
+      which XLA lowers with different rounding (~1 ulp/event), so sharded
+      fused vs stock agree to fp32 accumulation tolerance only.
+    * ``pallas`` — the ``kernels/replay_ring`` megakernel: one pallas_call
+      per event with scalar-prefetched ring rows and in-place aliased
+      writes (interpret mode off-TPU).
+
+    For non-stock impls the carry is ``(ring, state, residue)`` and the
+    jitted scan **donates** it (``donate_argnums=0``): the K·D ring stops
+    being double-buffered across scan dispatches.  ``whatif=True`` swaps
+    the gradient stage for the in-kernel/streamed closed-form gradients
+    (``g = a ⊙ (w_pulled − w*)``; combine mode, trivial topology): the
+    scan fn then takes ``(carry, xs, (a, w*))`` and no minibatches ride
+    the trace at all.
     """
     coef = jnp.full((c,), 1.0 / c, jnp.float32)
     D = layout.total
@@ -125,25 +157,83 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
         parts = jax.vmap(lambda r, t: r[t], in_axes=(0, 1))(ring, x["ts"])
         return flatten.shard_unpack(jnp.moveaxis(parts, 0, 1), D)
 
-    def gradients(ring, x):
-        pulled = flatten.batched_flat_to_tree(slot_weights(ring, x), layout)
+    def gradients_of(pulled_flat, x):
+        """vmapped grad_fn at the (c, D) fp32 pulled weights, cast to fp32
+        ONCE right after the backward pass — the member-mean/flatten
+        stages downstream see fp32 and their casts are no-ops (one cast
+        per event instead of one per reduction on the hot loop)."""
+        pulled = flatten.batched_flat_to_tree(pulled_flat, layout)
         if group_size == 1:
-            return jax.vmap(grad_fn)(pulled, x["batch"])
+            g = jax.vmap(grad_fn)(pulled, x["batch"])
+            return jax.tree.map(lambda a: a.astype(jnp.float32), g)
         # member gradients share the slot's pulled weights; average the
         # (c, gs) gradient stack over the group axis (Eq. 3 locally) —
         # weighted by the survivor mask when membership is elastic (a
         # group with a crashed member aggregates over survivors)
         g = jax.vmap(lambda p, b: jax.vmap(lambda bb: grad_fn(p, bb))(b))(
             pulled, x["batch"])
+        g = jax.tree.map(lambda a: a.astype(jnp.float32), g)
         if member_masked:
             mc = x["mcoef"]                              # (c, gs)
             def wmean(a):
                 w = mc.reshape(mc.shape + (1,) * (a.ndim - 2))
-                return (a.astype(jnp.float32) * w).sum(axis=1)
+                return (a * w).sum(axis=1)
             return jax.tree.map(wmean, g)
-        return jax.tree.map(lambda a: a.astype(jnp.float32).mean(axis=1), g)
+        return jax.tree.map(lambda a: a.mean(axis=1), g)
 
-    if spec.kernel_supported and shards > 1:
+    def gradients(ring, x):
+        return gradients_of(slot_weights(ring, x), x)
+
+    fused = ring_impl in ("fused", "pallas") and spec.kernel_supported
+    if fused:
+        from repro.kernels import replay_ring   # lazy: breaks import cycle
+
+        def slot_weights_flat(ring, x):
+            """Fused-impl gather off the flat (K, Dp) ring (padding and —
+            with a bf16 ring — quantization stripped): the (c, D) fp32
+            weights the slot gradients see.  Sharded traces view the
+            buffer as (K, S, Dp) rows for the per-shard-timestamp
+            assembly; the flat layout is the shard rows concatenated, so
+            this is bitwise the stock per-shard gather."""
+            if shards == 1:
+                return ring[x["ts"]][..., :D].astype(jnp.float32)
+            view = ring[:, :shards * Dp].reshape(K, shards, Dp)
+            parts = jax.vmap(lambda r, t: r[t],
+                             in_axes=(1, 1), out_axes=1)(view, x["ts"])
+            return parts.reshape(c, shards * Dp)[:, :D].astype(jnp.float32)
+
+        if whatif:
+            def event(aux, carry, x):
+                ring, s, res = carry
+                a, wstar = aux
+                if ring_impl == "pallas" and K >= 2:
+                    idx = jnp.concatenate(
+                        [jnp.stack([x["prev"], x["slot"]]), x["ts"]])
+                    ring, s, res = replay_ring.ring_apply_whatif(
+                        ring, s, res, a, wstar, coef_of(x), x["lrs"], idx,
+                        spec=spec)
+                else:
+                    ring, s, res = optim.apply_event_ring_whatif(
+                        spec, ring, s, res, a, wstar, x["ts"], coef_of(x),
+                        x["lrs"], x["prev"], x["slot"])
+                return (ring, s, res), None
+        else:
+            def event(carry, x):
+                ring, s, res = carry
+                g = flatten.batched_tree_to_flat(
+                    gradients_of(slot_weights_flat(ring, x), x))
+                gp = flatten.pad_flat(g, ring.shape[1])
+                if ring_impl == "pallas":
+                    idx = jnp.stack([x["prev"], x["slot"]])
+                    ring, s, res = replay_ring.ring_apply(
+                        ring, s, res, gp, coef_of(x), x["lrs"], idx,
+                        spec=spec, mode=mode)
+                else:
+                    ring, s, res = optim.apply_event_ring(
+                        spec, ring, s, res, gp, coef_of(x), x["lrs"],
+                        x["prev"], x["slot"], mode)
+                return (ring, s, res), None
+    elif spec.kernel_supported and shards > 1:
         def event(carry, x):
             ring, s = carry
             g = flatten.batched_tree_to_flat(gradients(ring, x))
@@ -167,19 +257,31 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
             ring = ring.at[x["slot"]].set(flatten.tree_to_flat(params))
             return (ring, (params, opt_state)), None
 
+    # single lane: unroll a few events per while-loop iteration (the body
+    # is tiny, loop bookkeeping is a measurable fraction).  The batched
+    # body is B× wider — unrolling only bloats its code and measured ~25%
+    # slower — and the what-if body streams O(D) temporaries whose
+    # lifetimes unrolling would overlap, so both stay rolled.
+    unroll = 1 if (batched or whatif) else 8
+
+    if whatif:
+        def run(carry, xs, aux):
+            return jax.lax.scan(functools.partial(event, aux), carry, xs,
+                                unroll=unroll)[0]
+        return jax.jit(run, donate_argnums=0)
+
     def run(carry, xs):
-        # single lane: unroll a few events per while-loop iteration (the
-        # body is tiny, loop bookkeeping is a measurable fraction).  The
-        # batched body is B× wider — unrolling only bloats its code and
-        # measured ~25% slower, so the vmapped scan stays rolled.
-        return jax.lax.scan(event, carry, xs, unroll=1 if batched else 8)[0]
+        return jax.lax.scan(event, carry, xs, unroll=unroll)[0]
 
     if batched:
         axes = {"ts": 0, "prev": None, "slot": None, "lrs": 0, "batch": 0}
         if masked:
             axes["coef"] = 0
-        return jax.jit(jax.vmap(run, in_axes=(0, axes)))
-    return jax.jit(run)
+        vrun = jax.vmap(run, in_axes=(0, axes))
+        return (jax.jit(vrun, donate_argnums=0) if fused else jax.jit(vrun))
+    # non-stock carries are donated: the ring/state/residue buffers are
+    # updated in place across scan dispatches instead of double-buffered
+    return jax.jit(run, donate_argnums=0) if fused else jax.jit(run)
 
 
 def _materialize_batches(trace: ArrivalTrace, batch_fn: Callable):
@@ -238,13 +340,15 @@ def _trace_xs(trace: ArrivalTrace, K: int, batch_fn: Optional[Callable],
     per-event LRs, and the whole trace's minibatches — materialized per
     slot via ``batch_fn``, or taken pre-staged from ``batches`` (a pytree
     with leading (steps, c) axes — (steps, c, gs) with learner groups —
-    e.g. a problem's vectorized ``stage_minibatches`` output).  With S > 1
-    PS shards ``ts`` carries the (steps, c, S) per-shard pulled rows."""
+    e.g. a problem's vectorized ``stage_minibatches`` output), or omitted
+    entirely when both are None (the what-if replay computes closed-form
+    gradients in-kernel and never touches data).  With S > 1 PS shards
+    ``ts`` carries the (steps, c, S) per-shard pulled rows."""
     steps_idx = np.arange(trace.steps)
-    if batches is None:
-        batches = _materialize_batches(trace, batch_fn)
-    else:
+    if batches is not None:
         batches = jax.tree.map(jnp.asarray, batches)
+    elif batch_fn is not None:
+        batches = _materialize_batches(trace, batch_fn)
     ts = (trace.pulled_ts if trace.shard_pulled_ts is None
           else trace.shard_pulled_ts)
     xs = {
@@ -252,8 +356,9 @@ def _trace_xs(trace: ArrivalTrace, K: int, batch_fn: Optional[Callable],
         "prev": jnp.asarray(steps_idx % K, jnp.int32),
         "slot": jnp.asarray((steps_idx + 1) % K, jnp.int32),
         "lrs": jnp.asarray(trace.lrs, jnp.float32),
-        "batch": batches,
     }
+    if batches is not None:
+        xs["batch"] = batches
     if trace.valid is not None:
         xs["coef"] = jnp.asarray(trace.event_coef())
     if trace.member_valid is not None:
@@ -262,17 +367,36 @@ def _trace_xs(trace: ArrivalTrace, K: int, batch_fn: Optional[Callable],
 
 
 def replay(trace: ArrivalTrace, run: RunConfig, *,
-           grad_fn: Callable,
+           grad_fn: Optional[Callable] = None,
            init_params,
-           batch_fn: Callable,
+           batch_fn: Optional[Callable] = None,
+           batches=None,
            eval_fn: Optional[Callable] = None,
-           eval_every: int = 0) -> SimResult:
+           eval_every: int = 0,
+           flat_grad=None) -> SimResult:
     """Execute a scheduled trace against real gradients, compiled.
 
     ``grad_fn(params, batch) -> grads`` must be vmappable (any jit-able JAX
-    function is).  ``batch_fn(learner_idx, minibatch_idx) -> batch`` is
-    evaluated host-side for every trace slot up front — the trace fixes the
-    (learner, minibatch) schedule, so the data rides along as scan inputs.
+    function is).  Minibatches come from exactly one of ``batch_fn``
+    (``(learner_idx, minibatch_idx) -> batch``, evaluated host-side per
+    trace slot) or ``batches`` (a pre-staged pytree with leading (steps, c)
+    axes — e.g. a problem's vectorized ``stage_minibatches`` output, which
+    skips the per-slot Python staging loop entirely; this is where most of
+    the single-replay wall clock went before PR 6).
+
+    ``run.ring_impl``/``run.ring_dtype`` select the scan body and ring
+    storage (DESIGN.md §12): the default ``auto`` runs the fused megakernel
+    path (Pallas on TPU, its bitwise jnp twin elsewhere) with a donated
+    carry; ``stock`` forces the pre-megakernel chain.
+
+    ``flat_grad = ("quadratic", a, w*)`` (flat (D,) fp32 arrays in the
+    ``optim.flatten`` layout) opts into the **what-if replay**: gradients
+    are computed in-kernel as ``a ⊙ (w_pulled − w*)`` and no data is staged
+    — peak memory O(K·D_ring + D), which is what makes trace-driven studies
+    at ``configs/`` big-model D feasible.  Requires a kernel-supported
+    optimizer, combine mode, the trivial topology and a non-stock impl;
+    anything else falls back to the staged-gradient path (so ``batch_fn``/
+    ``batches`` must still be provided when those conditions can miss).
 
     With ``eval_every`` set, the scan runs in eval_every-sized segments;
     a trailing remainder segment (steps % eval_every != 0) has a different
@@ -296,23 +420,71 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
             f"slots fold with coefficient 0; sequential optimizer events "
             f"cannot be masked), got mode={trace.mode!r}")
 
-    scan_fn = _make_scan_fn(grad_fn, spec, trace.mode, c, K, layout,
-                            shards=S, group_size=gs,
-                            masked=trace.valid is not None,
-                            member_masked=trace.member_valid is not None)
+    impl = optim.resolve_ring_impl(run.ring_impl, spec)
+    ef = run.ring_dtype == "bf16"
+    whatif = (flat_grad is not None and impl != "stock"
+              and trace.mode == "combine" and S == 1 and gs == 1)
+    if whatif:
+        kind = flat_grad[0]
+        if kind != "quadratic":
+            raise ValueError(f"unknown flat_grad kind {kind!r}; expected "
+                             f"('quadratic', a, wstar)")
+    elif grad_fn is None:
+        raise ValueError("grad_fn is required outside the what-if replay")
+    elif (batch_fn is None) == (batches is None):
+        raise ValueError("pass exactly one of batch_fn / batches")
 
-    xs = _trace_xs(trace, K, batch_fn)
+    scan_fn = _make_scan_fn(None if whatif else grad_fn, spec, trace.mode,
+                            c, K, layout, shards=S, group_size=gs,
+                            masked=trace.valid is not None,
+                            member_masked=trace.member_valid is not None,
+                            ring_impl=impl, ring_dtype=run.ring_dtype,
+                            whatif=whatif)
+
+    xs = _trace_xs(trace, K, None if whatif else batch_fn,
+                   batches=None if whatif else batches)
     flat0 = flatten.tree_to_flat(init_params)
     D = flat0.shape[0]
     Dp = topo.padded_width(D)
-    if S > 1:
+    if impl != "stock":
+        # flat (K, width) ring in the ring dtype — sharded traces use the
+        # concatenated shard rows (width = S·Dp ≥ D), the Pallas megakernel
+        # a row-block tile multiple on top; padding zeros are inert.  With
+        # a bf16 ring the fp32 error-feedback residue of the latest row
+        # completes the carry; the scan donates all three buffers.
+        from repro.kernels import replay_ring   # lazy: import cycle
+        width = D if S == 1 else S * Dp
+        if impl == "pallas":
+            width = replay_ring.padded_width(width)
+        rdt = jnp.bfloat16 if ef else jnp.float32
+        flat_pad = flatten.pad_flat(flat0, width)
+        q0 = flat_pad.astype(rdt)
+        ring = jnp.tile(q0[None], (K, 1))
+        res0 = (flat_pad - q0.astype(jnp.float32)) if ef else None
+        s0 = None
+        if spec.state_keys:
+            s0 = flatten.pad_flat(
+                flatten.tree_to_flat(opt_state[spec.state_keys[0]]), width)
+        carry = (ring, s0, res0)
+
+        def params_of(carry, done):
+            row = carry[0][done % K].astype(jnp.float32)
+            if ef:
+                row = row + carry[2]
+            return _unflatten_jit(layout)(row[:D])
+
+        aux = None
+        if whatif:
+            aux = (flatten.pad_flat(flat_grad[1].astype(jnp.float32), width),
+                   flatten.pad_flat(flat_grad[2].astype(jnp.float32), width))
+    elif S > 1:
         # per-shard rings: (S, K, Dp), row r of shard s = snapshot ts=r of
         # the shard's slice (the σ_s ≤ σ invariant keeps K a valid bound)
         ring = jnp.broadcast_to(
             flatten.shard_pack(flat0, S, Dp)[:, None, :], (S, K, Dp))
     else:
         ring = jnp.broadcast_to(flat0, (K, D))
-    if spec.kernel_supported:
+    if impl == "stock" and spec.kernel_supported:
         # flat-domain carry: ring + the (D,)/(S, Dp) state vector (or None)
         s0 = None
         if spec.state_keys:
@@ -325,11 +497,15 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
             row = (carry[0][done % K] if S == 1
                    else flatten.shard_unpack(carry[0][:, done % K], D))
             return _unflatten_jit(layout)(row)
-    else:
+    elif impl == "stock":
         carry = (ring, (init_params, opt_state))
 
         def params_of(carry, done):
             return carry[1][0]
+
+    def advance(carry, seg):
+        return (scan_fn(carry, seg, aux) if whatif
+                else scan_fn(carry, seg))
 
     history = []
     if eval_fn and eval_every:
@@ -337,14 +513,14 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
         while done < steps:
             take = min(eval_every, steps - done)
             seg = jax.tree.map(lambda a: a[done:done + take], xs)
-            carry = scan_fn(carry, seg)
+            carry = advance(carry, seg)
             done += take
             if done % eval_every == 0:
                 history.append({"update": done,
                                 "time": float(trace.event_time[done - 1]),
                                 **eval_fn(params_of(carry, done))})
     else:
-        carry = scan_fn(carry, xs)
+        carry = advance(carry, xs)
 
     params = params_of(carry, steps)
     return SimResult(trace.clock_log(), steps, trace.simulated_time,
@@ -417,6 +593,13 @@ def replay_batch(traces: Sequence[ArrivalTrace],
         if other != spec:
             raise ValueError(f"batch members must share the optimizer "
                              f"spec: {spec} vs {other}")
+    ring_cfg = (runs[0].ring_impl, runs[0].ring_dtype)
+    for run in runs[1:]:
+        if (run.ring_impl, run.ring_dtype) != ring_cfg:
+            raise ValueError(
+                f"batch members must share (ring_impl, ring_dtype): "
+                f"{ring_cfg} vs {(run.ring_impl, run.ring_dtype)} — a bf16 "
+                f"lane's carry has a different dtype/residue layout")
     opt_state = optim.init_state(spec, init_params)
     if not spec.kernel_supported:
         raise ValueError(f"{spec.optimizer!r} has no flat lane layout; "
@@ -429,8 +612,11 @@ def replay_batch(traces: Sequence[ArrivalTrace],
                 f"sharded/grouped traces sequentially")
     K = max(trace.max_staleness for trace in traces) + 1
     layout = flatten.layout_of(init_params)
+    impl = optim.resolve_ring_impl(runs[0].ring_impl, spec)
+    ef = runs[0].ring_dtype == "bf16"
     scan_fn = _make_scan_fn(grad_fn, spec, mode, c, K, layout, batched=True,
-                            masked=masked)
+                            masked=masked, ring_impl=impl,
+                            ring_dtype=runs[0].ring_dtype)
 
     if batches is None:
         xs_lanes = [_trace_xs(trace, K, fn)
@@ -448,15 +634,38 @@ def replay_batch(traces: Sequence[ArrivalTrace],
     xs["prev"] = xs_lanes[0]["prev"]
     xs["slot"] = xs_lanes[0]["slot"]
     flat0 = flatten.tree_to_flat(init_params)
-    ring = jnp.broadcast_to(flat0, (B, K) + flat0.shape)
-    s0 = None
-    if spec.state_keys:
-        s_flat = flatten.tree_to_flat(opt_state[spec.state_keys[0]])
-        s0 = jnp.broadcast_to(s_flat, (B,) + s_flat.shape)
-    carry = (ring, s0)
+    D = flat0.shape[0]
+    if impl != "stock":
+        from repro.kernels import replay_ring   # lazy: import cycle
+        width = replay_ring.padded_width(D) if impl == "pallas" else D
+        rdt = jnp.bfloat16 if ef else jnp.float32
+        flat_pad = flatten.pad_flat(flat0, width)
+        q0 = flat_pad.astype(rdt)
+        ring = jnp.tile(q0[None, None], (B, K, 1))
+        res0 = (jnp.tile((flat_pad - q0.astype(jnp.float32))[None], (B, 1))
+                if ef else None)
+        s0 = None
+        if spec.state_keys:
+            s_flat = flatten.pad_flat(
+                flatten.tree_to_flat(opt_state[spec.state_keys[0]]), width)
+            s0 = jnp.tile(s_flat[None], (B, 1))
+        carry = (ring, s0, res0)
 
-    def params_of(carry, lane, done):
-        return _unflatten_jit(layout)(carry[0][lane, done % K])
+        def params_of(carry, lane, done):
+            row = carry[0][lane, done % K].astype(jnp.float32)
+            if ef:
+                row = row + carry[2][lane]
+            return _unflatten_jit(layout)(row[:D])
+    else:
+        ring = jnp.broadcast_to(flat0, (B, K) + flat0.shape)
+        s0 = None
+        if spec.state_keys:
+            s_flat = flatten.tree_to_flat(opt_state[spec.state_keys[0]])
+            s0 = jnp.broadcast_to(s_flat, (B,) + s_flat.shape)
+        carry = (ring, s0)
+
+        def params_of(carry, lane, done):
+            return _unflatten_jit(layout)(carry[0][lane, done % K])
 
     def segment(lo, hi):
         # prev/slot are unbatched (steps,); everything else is (B, steps, …)

@@ -112,6 +112,77 @@ class MLPProblem:
 
 
 # ---------------------------------------------------------------------------
+# diagonal quadratic: the what-if replay vehicle (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+class QuadraticProblem:
+    """Diagonal quadratic loss ``0.5·mean(a·(w − w*)²)`` with closed-form
+    gradients ``g = a ⊙ (w − w*)`` — the trace-driven *what-if* vehicle.
+
+    Because the gradient is a flat elementwise expression, the replay
+    engine evaluates it in-kernel (``flat_grad`` below) and never stages
+    minibatch data: peak memory is the ring carry alone, which is what
+    makes staleness what-if studies feasible at ``configs/`` big-model D
+    (pass ``arch="qwen2_1_5b"`` etc. to size D to a registered
+    architecture's parameter count).  ``a`` and ``w*`` are generated
+    on-device from ``iota`` formulas — no (D,) host materialization, and
+    deterministic in (d, seed).  The ``grad_fn``/``batch_fn_for`` twins
+    keep the problem valid on every non-what-if path (stock impl, legacy
+    oracle, sharded traces): the batch is a 1-element dummy the gradient
+    ignores.
+    """
+
+    def __init__(self, d: int = 4096, arch: str = None, seed: int = 0):
+        if arch is not None:
+            from repro.configs import get_config
+            d = int(get_config(arch).param_count())
+        self.d = int(d)
+        self._seed = seed
+
+        def make(dd=self.d, s=seed):
+            i = jnp.arange(dd, dtype=jnp.float32)
+            # curvatures in [0.5, 1.5): positive definite, non-isotropic
+            a = 0.5 + ((i + 37.0 * s) % 1000.0) / 1000.0
+            wstar = jnp.sin(1e-3 * i + s)
+            return a, wstar
+
+        a, wstar = jax.jit(make)()
+        self.flat_grad = ("quadratic", a, wstar)
+        # a / w* enter the jit as ARGUMENTS, never closure constants: XLA
+        # embeds closed-over arrays as program constants (an extra full-D
+        # copy each, plus constant-folded derivatives like -w*), which at
+        # what-if scale is tens of bytes/param of pure waste.
+        self._loss = jax.jit(
+            lambda w, a, ws: 0.5 * jnp.mean(a * (w - ws) ** 2))
+
+    @property
+    def init(self) -> Dict[str, jax.Array]:
+        # a fresh zeros pytree per access: the engine flattens it and drops
+        # the reference, so w0 never stays live across the replay — at
+        # what-if D every avoided (D,) resident is 4 bytes/param of peak
+        return {"w": jnp.zeros((self.d,), jnp.float32)}
+
+    @property
+    def dataset_size(self) -> int:
+        return 1 << 16          # synthetic: epochs-maths placeholder
+
+    def grad_fn(self, p, batch):
+        a, wstar = self.flat_grad[1], self.flat_grad[2]
+        return {"w": a * (p["w"] - wstar)}
+
+    def batch_fn_for(self, mu: int, seed: int = 0) -> Callable:
+        def fn(learner: int, step: int):
+            return np.zeros((1,), np.float32)
+        return fn
+
+    def stage_minibatches(self, learner, mb_index, mu: int, seed: int = 0):
+        return np.zeros(np.shape(learner) + (1,), np.float32)
+
+    def eval_fn(self, p) -> Dict[str, float]:
+        return {"loss": float(self._loss(p["w"], self.flat_grad[1],
+                                         self.flat_grad[2]))}
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 _REGISTRY: Dict[str, Callable] = {}
@@ -142,3 +213,4 @@ def get_problem(name: str, args: Tuple[Tuple[str, object], ...] = ()):
 
 
 register_problem("mlp_teacher", MLPProblem)
+register_problem("quadratic_whatif", QuadraticProblem)

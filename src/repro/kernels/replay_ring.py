@@ -1,0 +1,375 @@
+"""Fused replay megakernel over the weight ring buffer (DESIGN.md §12).
+
+The compiled replay engine (``core/engine.py``) executes one update event
+per ``lax.scan`` step against a (K, D) ring of parameter snapshots.  The
+stock body is a chain of XLA ops — ring gather, combine einsum, optimizer
+update, dynamic-update-slice write — each a separate pass over D.  This
+module fuses the whole event into ONE ``pallas_call``:
+
+    ring-read(prev row) → [+ error-feedback residue] → combine/sequential
+    optimizer event → quantize → ring-write(slot row) [+ residue write]
+
+tiled over D exactly like ``kernels/ps_update.py`` ((R, 128) lanes,
+row-block grid).  Two properties make it one launch per scan step:
+
+* **Scalar-prefetch ring indices** — ``prev``/``slot`` (and the per-slot
+  ``ts`` rows for the what-if kernel) arrive as a scalar-prefetch operand
+  (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index maps pick the
+  ring *rows* dynamically per launch while the grid stays static.
+* **In-place ring writes** — ``input_output_aliases`` aliases the ring (and
+  state/residue) inputs onto the outputs, so the kernel updates one
+  (1, row_block, 128) slot-row block in place instead of copying the whole
+  K·D ring per event.  Under ``lax.scan`` with a donated carry this is the
+  difference between the ring living in memory once vs. three times.
+
+Compressed ring (``ring_dtype == bf16``): the ring rows store bf16
+snapshots while the update math stays fp32.  The quantization error is not
+lost — an fp32 **error-feedback residue** vector carries ``w − q(w)`` of the
+*latest* row and is re-added before the next update, so the master weight
+chain is exactly the fp32 trajectory *given the gradients*; the only
+approximation is that gradients are evaluated at quantized snapshots
+(tests/test_engine_megakernel.py pins both halves of that statement).
+
+The **what-if** kernel goes one step further for trace-driven studies on
+big-model shapes: for problems whose flat gradient is a closed form
+(``g = a ⊙ (w_pulled − w*)``, the quadratic family), the c per-slot
+gradients are computed *inside* the kernel, one (row_block, 128) tile at a
+time over a (rows, c) grid — the (c, D) pulled-weight and gradient
+matrices are never materialized, so peak memory drops from O((K + c)·D)
+to O(K·D_bytes + D) and the feasible D grows ~10–100× (EXPERIMENTS.md
+§Sim, max-feasible-D table).
+
+Off-accelerator every entry point selects ``interpret=True`` automatically
+(the CPU-CI fallback contract of ``kernels/ops.py``); the module-level
+``pallas_dispatches``/``last_interpret`` counters record which dispatch
+branch built the kernel so tests can assert the fused path is really the
+one exercised.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ps_update import DEFAULT_ROW_BLOCK, LANES
+from repro.optim.spec import UpdateSpec, update_event
+
+# trace-time dispatch telemetry: how many times a replay megakernel was
+# built (counted at trace time — once per compiled scan, not per step) and
+# whether the last build ran in interpret mode.  Tests assert on these to
+# pin the CPU-CI fallback branch.
+pallas_dispatches = 0
+last_interpret: Optional[bool] = None
+
+
+def default_interpret() -> bool:
+    """Pallas compiles on TPU only; everywhere else run the kernel in
+    interpret mode (same math, XLA-executed) — tier-1 CI never skips the
+    fused path, it just doesn't get TPU codegen."""
+    return jax.default_backend() != "tpu"
+
+
+def row_block_for(width: int) -> int:
+    return int(min(DEFAULT_ROW_BLOCK, max(1, -(-width // LANES))))
+
+
+def padded_width(width: int) -> int:
+    """Ring width padded so (width / 128) rows tile evenly into row blocks
+    (zero padding is inert through sgd/momentum/adagrad events)."""
+    tile = row_block_for(width) * LANES
+    return -(-width // tile) * tile
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+def _tile_events(spec: UpdateSpec, mode: str, c: int, coef_ref, lrs_ref,
+                 w, s, g_ref):
+    """The update events on one (rb, LANES) tile — same math as
+    ``ps_update._events`` but with the combine contraction phrased exactly
+    like ``optim.apply_event_flat``'s ``einsum("cd,c->d")`` (the stock
+    scan body), so the fp32 megakernel replay is BITWISE-equal to the
+    stock path (the ``crl,co->rl`` einsum lowers with a different
+    accumulation and drifts by 1 ulp)."""
+    if mode == "combine":
+        gf = g_ref[...].astype(jnp.float32).reshape(c, -1)
+        ghat = jnp.einsum("cd,c->d", gf,
+                          coef_ref[...].astype(jnp.float32).reshape(c))
+        return update_event(spec, w, s, ghat.reshape(w.shape), lrs_ref[0, 0])
+    for i in range(c):                                    # c is static
+        gi = coef_ref[i, 0] * g_ref[i].astype(jnp.float32)
+        w, s = update_event(spec, w, s, gi, lrs_ref[i, 0])
+    return w, s
+
+
+def _apply_kernel(idx_ref, *refs, spec: UpdateSpec, mode: str, c: int,
+                  stateful: bool, ef: bool):
+    """One fused ring event, external gradients.  Grid: (row_blocks,).
+
+    ``idx_ref`` = [prev_row, slot_row].  Input blocks (after the scalar
+    prefetch): coef (c,1), lrs (c,1), ring (1,rb,L) at row prev, state
+    (rb,L) if stateful, residue (rb,L) if ef, grads (c,rb,L).  Outputs
+    (aliased in-place): ring block at row slot, state, residue."""
+    n_in = 3 + int(stateful) + int(ef) + 1
+    ins, outs = refs[:n_in], refs[n_in:]
+    coef_ref, lrs_ref, ring_ref = ins[0], ins[1], ins[2]
+    k = 3
+    s_ref = ins[k] if stateful else None
+    k += int(stateful)
+    res_ref = ins[k] if ef else None
+    k += int(ef)
+    g_ref = ins[k]
+    ring_out = outs[0]
+    s_out = outs[1] if stateful else None
+    res_out = outs[1 + int(stateful)] if ef else None
+
+    w = ring_ref[0].astype(jnp.float32)
+    if ef:
+        w = w + res_ref[...]                     # re-add quantization error
+    s = s_ref[...].astype(jnp.float32) if stateful else None
+    w, s = _tile_events(spec, mode, c, coef_ref, lrs_ref, w, s, g_ref)
+    q = w.astype(ring_out.dtype)
+    ring_out[0] = q
+    if stateful:
+        s_out[...] = s
+    if ef:
+        res_out[...] = w - q.astype(jnp.float32)
+
+
+def _whatif_kernel(idx_ref, *refs, spec: UpdateSpec, c: int,
+                   stateful: bool, ef: bool):
+    """One fused ring event with IN-KERNEL quadratic gradients.
+
+    Grid: (row_blocks, c) — the inner grid axis streams the c slots, each
+    reading its pulled ring row block (``idx_ref[2 + j]``) and accumulating
+    ``coef_j · a ⊙ (w_ts − w*)`` into a VMEM scratch tile; the last slot
+    runs the optimizer event and writes ring/state/residue.  The (c, D)
+    gradient matrix never exists.  Combine mode only; the caller guarantees
+    K ≥ 2 so the slot row written here is never also a pulled row of a
+    *later* row block in this launch's column range (blocks are column-
+    disjoint, so even max-stale reads of the slot row are safe)."""
+    n_in = 6 + int(stateful) + int(ef)
+    ins, outs, acc_ref = refs[:n_in], refs[n_in:-1], refs[-1]
+    coef_ref, lrs_ref = ins[0], ins[1]
+    ring_ts_ref, ring_prev_ref = ins[2], ins[3]
+    a_ref, ws_ref = ins[4], ins[5]
+    k = 6
+    s_ref = ins[k] if stateful else None
+    k += int(stateful)
+    res_ref = ins[k] if ef else None
+    ring_out = outs[0]
+    s_out = outs[1] if stateful else None
+    res_out = outs[1 + int(stateful)] if ef else None
+
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g_j = a_ref[...] * (ring_ts_ref[0].astype(jnp.float32) - ws_ref[...])
+    acc_ref[...] += coef_ref[j, 0] * g_j
+
+    @pl.when(j == c - 1)
+    def _apply():
+        w = ring_prev_ref[0].astype(jnp.float32)
+        if ef:
+            w = w + res_ref[...]
+        s = s_ref[...].astype(jnp.float32) if stateful else None
+        w2, s2 = update_event(spec, w, s, acc_ref[...], lrs_ref[0, 0])
+        q = w2.astype(ring_out.dtype)
+        ring_out[0] = q
+        if stateful:
+            s_out[...] = s2
+        if ef:
+            res_out[...] = w2 - q.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+def ring_apply(ring: jax.Array, s: Optional[jax.Array],
+               res: Optional[jax.Array], g: jax.Array, coef: jax.Array,
+               lrs: jax.Array, idx: jax.Array, *, spec: UpdateSpec,
+               mode: str = "combine", row_block: Optional[int] = None,
+               interpret: Optional[bool] = None
+               ) -> Tuple[jax.Array, Optional[jax.Array],
+                          Optional[jax.Array]]:
+    """ONE fused ring event: read row ``idx[0]``, apply the c-gradient
+    update, write row ``idx[1]`` in place.
+
+    ``ring``: (K, Dp) in ring dtype (fp32 or bf16), Dp a
+    :func:`padded_width` multiple; ``s``: (Dp,) fp32 optimizer state or
+    None (sgd); ``res``: (Dp,) fp32 error-feedback residue or None (fp32
+    ring); ``g``: (c, Dp) fp32; ``coef``/``lrs``: (c,); ``idx``: (2,)
+    int32 [prev, slot].  Returns the updated (ring, s, res)."""
+    global pallas_dispatches, last_interpret
+    if not spec.kernel_supported:
+        raise ValueError(f"{spec.optimizer!r} has no kernel path")
+    if interpret is None:
+        interpret = default_interpret()
+    pallas_dispatches += 1
+    last_interpret = bool(interpret)
+
+    K, Dp = ring.shape
+    c = g.shape[0]
+    if row_block is None:
+        row_block = row_block_for(Dp)
+    if Dp % (row_block * LANES):
+        raise ValueError(f"ring width {Dp} is not a multiple of the "
+                         f"{row_block}x{LANES} tile; pad via padded_width()")
+    rows = Dp // LANES
+    grid = (rows // row_block,)
+    stateful, ef = s is not None, res is not None
+
+    ringt = ring.reshape(K, rows, LANES)
+    gt = g.reshape(c, rows, LANES)
+    coef2 = coef.reshape(c, 1).astype(jnp.float32)
+    lrs2 = lrs.reshape(c, 1).astype(jnp.float32)
+
+    vec = pl.BlockSpec((c, 1), lambda i, idx: (0, 0))
+    row = pl.BlockSpec((row_block, LANES), lambda i, idx: (i, 0))
+    ring_in = pl.BlockSpec((1, row_block, LANES),
+                           lambda i, idx: (idx[0], i, 0))
+    ring_out = pl.BlockSpec((1, row_block, LANES),
+                            lambda i, idx: (idx[1], i, 0))
+    g_spec = pl.BlockSpec((c, row_block, LANES), lambda i, idx: (0, i, 0))
+
+    operands = [coef2, lrs2, ringt]
+    in_specs = [vec, vec, ring_in]
+    out_shape = [jax.ShapeDtypeStruct(ringt.shape, ringt.dtype)]
+    out_specs = [ring_out]
+    # scalar prefetch counts as input 0, so the ring is input index 3
+    aliases = {3: 0}
+    if stateful:
+        st = s.reshape(rows, LANES)
+        aliases[len(operands) + 1] = len(out_shape)
+        operands.append(st)
+        in_specs.append(row)
+        out_shape.append(jax.ShapeDtypeStruct(st.shape, st.dtype))
+        out_specs.append(row)
+    if ef:
+        rt = res.reshape(rows, LANES)
+        aliases[len(operands) + 1] = len(out_shape)
+        operands.append(rt)
+        in_specs.append(row)
+        out_shape.append(jax.ShapeDtypeStruct(rt.shape, rt.dtype))
+        out_specs.append(row)
+    operands.append(gt)
+    in_specs.append(g_spec)
+
+    kernel = functools.partial(_apply_kernel, spec=spec, mode=mode, c=c,
+                               stateful=stateful, ef=ef)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=in_specs, out_specs=out_specs),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(idx.astype(jnp.int32), *operands)
+
+    ring2 = out[0].reshape(K, Dp)
+    k = 1
+    s2 = out[k].reshape(Dp) if stateful else None
+    k += int(stateful)
+    res2 = out[k].reshape(Dp) if ef else None
+    return ring2, s2, res2
+
+
+def ring_apply_whatif(ring: jax.Array, s: Optional[jax.Array],
+                      res: Optional[jax.Array], a: jax.Array,
+                      wstar: jax.Array, coef: jax.Array, lrs: jax.Array,
+                      idx: jax.Array, *, spec: UpdateSpec,
+                      row_block: Optional[int] = None,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jax.Array, Optional[jax.Array],
+                                 Optional[jax.Array]]:
+    """ONE fused ring event with in-kernel gradients g_j = a⊙(w_ts_j − w*).
+
+    ``idx``: (2 + c,) int32 [prev, slot, ts_0 … ts_{c-1}].  ``a``/``wstar``:
+    (Dp,) fp32 (zero-padded — padded a makes padded gradients zero, so the
+    pad stays inert).  Combine mode only; requires K ≥ 2 (the engine falls
+    back to the streamed jnp twin for K = 1)."""
+    global pallas_dispatches, last_interpret
+    if not spec.kernel_supported:
+        raise ValueError(f"{spec.optimizer!r} has no kernel path")
+    if ring.shape[0] < 2:
+        raise ValueError("whatif kernel needs K >= 2 (slot row must not be "
+                         "a pulled row); use the jnp twin for K = 1")
+    if interpret is None:
+        interpret = default_interpret()
+    pallas_dispatches += 1
+    last_interpret = bool(interpret)
+
+    K, Dp = ring.shape
+    c = idx.shape[0] - 2
+    if row_block is None:
+        row_block = row_block_for(Dp)
+    if Dp % (row_block * LANES):
+        raise ValueError(f"ring width {Dp} is not a multiple of the "
+                         f"{row_block}x{LANES} tile; pad via padded_width()")
+    rows = Dp // LANES
+    grid = (rows // row_block, c)
+    stateful, ef = s is not None, res is not None
+
+    ringt = ring.reshape(K, rows, LANES)
+    coef2 = coef.reshape(c, 1).astype(jnp.float32)
+    lrs2 = lrs.reshape(c, 1).astype(jnp.float32)
+
+    vec = pl.BlockSpec((c, 1), lambda i, j, idx: (0, 0))
+    row = pl.BlockSpec((row_block, LANES), lambda i, j, idx: (i, 0))
+    ring_ts = pl.BlockSpec((1, row_block, LANES),
+                           lambda i, j, idx: (idx[2 + j], i, 0))
+    ring_prev = pl.BlockSpec((1, row_block, LANES),
+                             lambda i, j, idx: (idx[0], i, 0))
+    ring_out = pl.BlockSpec((1, row_block, LANES),
+                            lambda i, j, idx: (idx[1], i, 0))
+
+    at = a.reshape(rows, LANES)
+    wt = wstar.reshape(rows, LANES)
+    operands = [coef2, lrs2, ringt, ringt, at, wt]
+    in_specs = [vec, vec, ring_ts, ring_prev, row, row]
+    out_shape = [jax.ShapeDtypeStruct(ringt.shape, ringt.dtype)]
+    out_specs = [ring_out]
+    aliases = {4: 0}          # alias the prev-row ring operand (input idx 4)
+    if stateful:
+        st = s.reshape(rows, LANES)
+        aliases[len(operands) + 1] = len(out_shape)
+        operands.append(st)
+        in_specs.append(row)
+        out_shape.append(jax.ShapeDtypeStruct(st.shape, st.dtype))
+        out_specs.append(row)
+    if ef:
+        rt = res.reshape(rows, LANES)
+        aliases[len(operands) + 1] = len(out_shape)
+        operands.append(rt)
+        in_specs.append(row)
+        out_shape.append(jax.ShapeDtypeStruct(rt.shape, rt.dtype))
+        out_specs.append(row)
+
+    kernel = functools.partial(_whatif_kernel, spec=spec, c=c,
+                               stateful=stateful, ef=ef)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=in_specs, out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((row_block, LANES), jnp.float32)]),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(idx.astype(jnp.int32), *operands)
+
+    ring2 = out[0].reshape(K, Dp)
+    k = 1
+    s2 = out[k].reshape(Dp) if stateful else None
+    k += int(stateful)
+    res2 = out[k].reshape(Dp) if ef else None
+    return ring2, s2, res2

@@ -151,6 +151,82 @@ def apply_event_flat(spec: UpdateSpec, w, s, g, coef, lrs,
     return w, s
 
 
+RING_IMPLS = ("auto", "pallas", "fused", "stock")
+RING_DTYPES = ("fp32", "bf16")
+
+
+def resolve_ring_impl(impl: str, spec: UpdateSpec) -> str:
+    """Resolve a RunConfig's ``ring_impl`` axis to a concrete scan body.
+
+    ``auto`` picks the Pallas megakernel on TPU and its fused jnp twin
+    everywhere else (same math, no interpret-mode launch overhead on the
+    CPU hot loop).  Optimizers without a flat event path (adamw) always
+    take the stock pytree body — their RunConfig validation already
+    rejected a bf16 ring."""
+    if impl not in RING_IMPLS:
+        raise ValueError(f"unknown ring_impl {impl!r}: expected one of "
+                         f"{RING_IMPLS}")
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "fused"
+    if not spec.kernel_supported:
+        return "stock"
+    return impl
+
+
+def apply_event_ring(spec: UpdateSpec, ring, s, res, g, coef, lrs,
+                     prev, slot, mode: str = "combine"):
+    """ONE fused ring event on flat buffers — the jnp twin of the Pallas
+    replay megakernel (``kernels/replay_ring.ring_apply``), and the
+    engine's ``ring_impl="fused"`` scan body.
+
+    ``ring``: (K, Dp) in the ring dtype (fp32 or bf16); ``s``: (Dp,) fp32
+    optimizer state or None (sgd); ``res``: (Dp,) fp32 error-feedback
+    residue or None (fp32 ring); ``g``: (c, Dp) fp32; ``prev``/``slot``:
+    ring row scalars.  The master chain is exact: the fp32 weights entering
+    ``apply_event_flat`` are ``q(w) + (w − q(w)) = w``, so with a bf16 ring
+    the only approximation anywhere is gradients being *evaluated* at
+    quantized snapshots (DESIGN.md §12).  With an fp32 ring the casts are
+    no-ops and this is bitwise the stock gather/update/set body."""
+    w = ring[prev].astype(jnp.float32)
+    if res is not None:
+        w = w + res
+    w, s = apply_event_flat(spec, w, s, g, coef, lrs, mode)
+    q = w.astype(ring.dtype)
+    ring = ring.at[slot].set(q)
+    if res is not None:
+        res = w - q.astype(jnp.float32)
+    return ring, s, res
+
+
+def apply_event_ring_whatif(spec: UpdateSpec, ring, s, res, a, wstar, ts,
+                            coef, lrs, prev, slot):
+    """Fused ring event with closed-form gradients g_j = a⊙(w_ts_j − w*),
+    streamed over the c slots with a ``fori_loop`` so the (c, Dp)
+    pulled-weight/gradient matrices never materialize — peak extra memory
+    is O(Dp), which is what makes trace-driven what-if replay feasible at
+    10–100× larger D (the jnp twin of ``replay_ring.ring_apply_whatif``;
+    combine mode only).  The accumulation order (slot 0 → c−1) matches the
+    kernel's inner grid axis bitwise."""
+    c = ts.shape[0]
+    coef = coef.astype(jnp.float32)
+
+    def body(j, acc):
+        row = ring[ts[j]].astype(jnp.float32)
+        return acc + coef[j] * (a * (row - wstar))
+
+    ghat = jax.lax.fori_loop(0, c, body,
+                             jnp.zeros(ring.shape[-1:], jnp.float32))
+    w = ring[prev].astype(jnp.float32)
+    if res is not None:
+        w = w + res
+    w, s = update_event(spec, w, s, ghat, lrs[0])
+    q = w.astype(ring.dtype)
+    ring = ring.at[slot].set(q)
+    if res is not None:
+        res = w - q.astype(jnp.float32)
+    return ring, s, res
+
+
 def apply_event_sharded(spec: UpdateSpec, w, s, g, coef, lrs,
                         mode: str = "combine"):
     """:func:`apply_event_flat` vmapped over a leading shard axis — the

@@ -74,6 +74,17 @@ def batched_flat_to_tree(flat: jax.Array, layout: TreeLayout):
     return jax.tree_util.tree_unflatten(layout.treedef, out)
 
 
+def pad_flat(flat: jax.Array, width: int) -> jax.Array:
+    """Zero-pad the last axis of a flat buffer out to ``width`` (a kernel
+    tile multiple or S·Dp shard width).  Trailing zeros are inert through
+    sgd/momentum/adagrad events — padding is pure layout, and slicing
+    ``[..., :D]`` is its exact inverse."""
+    d = flat.shape[-1]
+    if width == d:
+        return flat
+    return jnp.pad(flat, [(0, 0)] * (flat.ndim - 1) + [(0, width - d)])
+
+
 def shard_pack(flat: jax.Array, shards: int, width: int) -> jax.Array:
     """(D,) flat buffer → (S, Dp) per-shard rows, zero-padding the last
     shard to the equal width Dp = ⌈D/S⌉ (core/topology.py layout).  Zeros
