@@ -27,6 +27,13 @@ Guarded metrics:
   XLA chain on the same trace + staged batches (DESIGN.md §12).
   Machine-relative; fails if the default replay path regresses vs what
   plain XLA delivers.
+* ``distributed_replay_updates_per_s`` — ``placement="spmd"`` what-if
+  throughput at S=4 on the emulated 8-device host (DESIGN.md §13),
+  measured in a subprocess so the device-count flag lands before jax
+  initializes.  Absolute with a wide margin: guards the SPMD path
+  collapsing (a stray host sync, a collective in the shard-local what-if
+  body), not the S=4/S=1 wall-clock ratio — that needs real cores and is
+  reported, unguarded, by ``benchmarks.distributed_replay``.
 
 Fresh measurements land in ``benchmarks/results/bench_guard.json`` (the CI
 job uploads it as a workflow artifact).  To demonstrate the gate trips:
@@ -66,6 +73,9 @@ FLOOR_MARGINS = {
     # win is donation/memory, not FLOPs) — fails if the megakernel path
     # ever regresses the hot loop vs what plain XLA delivers
     "megakernel_vs_xla_ratio": 0.55,
+    # absolute spmd throughput on the emulated mesh: wide margin, same
+    # rationale as compiled_updates_per_s (CI hardware + core count vary)
+    "distributed_replay_updates_per_s": 0.25,
 }
 
 
@@ -105,6 +115,8 @@ def measure() -> dict:
     sweep = _bench_sweep(updates=30, lam=16, seeds=3, repeats=3)
     elastic = _bench_elastic_schedule()
     mk = _bench_megakernel(updates=48, lam=16, repeats=3)
+    from benchmarks.distributed_replay import measure as _measure_dist
+    dist = _measure_dist(updates=32, d=1_000_000, repeats=2, shards=(1, 4))
     return {
         "metrics": {
             "compiled_updates_per_s": row["compiled_updates_per_s"],
@@ -112,11 +124,14 @@ def measure() -> dict:
             "batched_sweep_speedup": sweep["speedup"],
             "elastic_schedule_updates_per_s": elastic["updates_per_s"],
             "megakernel_vs_xla_ratio": mk["megakernel_vs_xla_ratio"],
+            "distributed_replay_updates_per_s":
+                dist["updates_per_s"]["spmd_s4"],
         },
         "engine_cell": row,
         "sweep_cell": sweep,
         "elastic_schedule_cell": elastic,
         "megakernel_cell": mk,
+        "distributed_replay_cell": dist,
     }
 
 

@@ -32,6 +32,7 @@ BENCHES = [
     ("sim_engine", "benchmarks.sim_engine_bench"),  # legacy loop vs compiled replay
     ("topology", "benchmarks.topology_scaling"),  # Rudra base/adv/adv* runtime curves
     ("elastic", "benchmarks.elastic_churn"),  # churn + backup-hardsync curves
+    ("distributed", "benchmarks.distributed_replay"),  # spmd replay on the 8-device emulated mesh
     ("bench_guard", "benchmarks.bench_guard"),    # CI perf floor gate
     ("baselines", "benchmarks.baselines"),   # paper sec-6 related work + sec-3.3 accrual
     ("ring", "benchmarks.ring_feasibility"),  # what-if max-feasible-D limit study (~5 min)
@@ -65,6 +66,8 @@ def main() -> None:
             kwargs = {"steps": 1000}
         if args.quick and bid == "sim_engine":
             kwargs = {"updates": 40}
+        if args.quick and bid == "distributed":
+            kwargs = {"updates": 32, "d": 1_000_000, "repeats": 2}
         mod.run(**kwargs)
         print(f"_meta/{bid}/seconds,{time.time() - t0:.1f},")
         sys.stdout.flush()

@@ -142,6 +142,22 @@ def run(epochs: int = 10) -> dict:
              all(claims.values()) if claims else False,
              " ".join(k for k, v in sorted(claims.items()) if not v))
 
+    # ---- SPMD distributed replay (if distributed_replay has run) -----------
+    dist = os.path.join(RESULTS_DIR, "distributed_replay.json")
+    if os.path.exists(dist):
+        with open(dist) as f:
+            derived = json.load(f).get("derived", {})
+        out["distributed_replay"] = derived
+        ups = derived.get("updates_per_s", {})
+        for key, v in sorted(ups.items()):
+            emit(f"summary/distributed/{key}", f"{v:.1f}up/s",
+                 f"devices={derived.get('devices')} D={derived.get('d')}")
+        ratios = {k: v for k, v in derived.items()
+                  if k.startswith("scaling_")}
+        for key, v in sorted(ratios.items()):
+            emit(f"summary/distributed/{key}", f"{v:.2f}x",
+                 f"cpu_count={derived.get('cpu_count')}")
+
     # ---- simulator engine throughput (if sim_engine_bench has run) ---------
     bench = os.path.join(RESULTS_DIR, "sim_engine_bench.json")
     if os.path.exists(bench):

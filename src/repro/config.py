@@ -30,6 +30,11 @@ from repro.optim.spec import KERNEL_OPTIMIZERS
 RING_DTYPES = ("fp32", "bf16")
 RING_IMPLS = ("auto", "pallas", "fused", "stock")
 
+# replay placement (DESIGN.md §13): "single" replays the whole trace on one
+# device; "spmd" shard_maps the scan over a (ps, learner) emulated device
+# mesh with real cross-shard collectives.
+PLACEMENTS = ("single", "spmd")
+
 # ---------------------------------------------------------------------------
 # Block types that can appear inside a repeating unit.
 # ---------------------------------------------------------------------------
@@ -360,6 +365,16 @@ class RunConfig:
     # gather→update→set chain, the bitwise baseline; fp32 only).
     ring_dtype: str = "fp32"
     ring_impl: str = "auto"
+    # --- replay placement (DESIGN.md §13) -----------------------------------
+    # placement: "single" (default) compiles the replay scan for one device;
+    # "spmd" shard_maps it over a make_sim_mesh(S, L) device mesh — each PS
+    # shard's (K, Dp) ring lives on its own "ps"-axis device and the c
+    # gradient slots of an update split across L "learner"-axis devices, with
+    # cross-shard pulls / combine pushes as real all_gather/psum/ppermute
+    # collectives.  spmd_learners: L (0 = auto — the largest divisor of c
+    # that fits the visible device count).
+    placement: str = "single"
+    spmd_learners: int = 0
     # --- elastic membership (repro.membership; core/trace schedule pass) ----
     # membership: join/leave/crash-restart events per learner.  Resolves
     # entirely at schedule time: joins/leaves move the effective λ(t) that
@@ -443,6 +458,28 @@ class RunConfig:
                     f"ring_dtype='bf16' requires a kernel-supported "
                     f"optimizer {KERNEL_OPTIMIZERS}; {self.optimizer!r} "
                     f"replays on the pytree path with an fp32 ring")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {self.placement!r}: "
+                             f"expected one of {PLACEMENTS}")
+        if self.spmd_learners < 0:
+            raise ValueError(f"spmd_learners must be >= 0, "
+                             f"got {self.spmd_learners}")
+        if self.spmd_learners and self.placement != "spmd":
+            raise ValueError(
+                f"spmd_learners={self.spmd_learners} only applies to "
+                f"placement='spmd' (got placement={self.placement!r})")
+        if self.placement == "spmd":
+            if self.optimizer not in KERNEL_OPTIMIZERS:
+                raise ValueError(
+                    f"placement='spmd' needs a kernel-supported optimizer "
+                    f"{KERNEL_OPTIMIZERS} (flat per-shard ring carries); "
+                    f"{self.optimizer!r} replays on the pytree path")
+            if (self.spmd_learners
+                    and self.gradients_per_update % self.spmd_learners):
+                raise ValueError(
+                    f"spmd_learners={self.spmd_learners} must divide the "
+                    f"update width c={self.gradients_per_update} so every "
+                    f"learner device owns an equal slot block")
         if self.elastic and self.lr_policy == "per_gradient":
             raise ValueError(
                 "per_gradient LRs imply sequential optimizer events, which "

@@ -41,8 +41,13 @@ from repro.core.lr_policies import resolve_trace_lrs
 from repro.core.protocols import init_ps_state
 from repro.core.simulator import SimResult
 from repro.core.topology import Topology
-from repro.core.trace import ArrivalTrace
+from repro.core.trace import ArrivalTrace, PlacementPlan, placement_plan
 from repro.optim import flatten
+
+# cross-shard pull assembly for the SPMD replay (DESIGN.md §13): one fused
+# all_gather over the "ps" axis, or the equivalent S−1 neighbor-ppermute
+# ring exchange (bitwise-equal data movement; slower on emulated devices)
+SPMD_ASSEMBLIES = ("all_gather", "ppermute")
 
 
 @functools.lru_cache(maxsize=32)
@@ -284,6 +289,200 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
     return jax.jit(run, donate_argnums=0) if fused else jax.jit(run)
 
 
+def _spmd_local_width(D: int, shards: int, ring_impl: str) -> int:
+    """Per-"ps"-device ring row width: the shard slice Dp = ⌈D/S⌉, padded
+    to the megakernel tile multiple when the local body is Pallas."""
+    Dp = -(-D // shards)
+    if ring_impl == "pallas":
+        from repro.kernels import replay_ring   # lazy: import cycle
+        return replay_ring.padded_width(Dp)
+    return Dp
+
+
+@functools.lru_cache(maxsize=32)
+def _make_spmd_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
+                       layout: flatten.TreeLayout, plan: PlacementPlan,
+                       xs_keys: tuple, group_size: int = 1,
+                       masked: bool = False, member_masked: bool = False,
+                       ring_impl: str = "fused", ring_dtype: str = "fp32",
+                       whatif: bool = False, assembly: str = "all_gather"):
+    """The replay scan shard_mapped over a ``(ps, learner)`` device mesh —
+    the distributed twin of :func:`_make_scan_fn` (DESIGN.md §13).
+
+    Placement: PS shard s's (K, Wl) ring slice (plus its optimizer-state /
+    residue rows) lives on "ps"-device s; learner-group device l owns the
+    contiguous slot block [l·cl, (l+1)·cl) of every update's c gradient
+    slots.  The per-event body then runs the paper's PS protocol as real
+    collectives:
+
+    * **pull** — each PS device gathers its own ring rows at its own
+      per-shard timestamps (the inconsistent-read column ``ts[:, s]``) and
+      an ``all_gather`` over "ps" assembles the (c, D) pulled weights on
+      every device (``assembly="ppermute"`` swaps in the bitwise-equal
+      S−1-hop neighbor ring exchange, ``optim.ring_all_gather``);
+    * **push** — combine mode reduces each learner device's local-slot
+      partial of ĝ = Σ coef_j·g_j with ONE ``psum`` over "learner"
+      (``optim.combine_spmd``); sequential mode ``all_gather``s the slot
+      gradients over "learner" instead (every event needs every slot);
+    * **update** — each PS device applies the fused/Pallas ring body
+      (``optim.apply_event_ring`` / ``replay_ring.ring_apply``) to its own
+      slice of ĝ — elementwise math, so per-shard applies are exactly the
+      shard slices of the single-device apply.
+
+    Equivalence to ``placement="single"`` (pinned by tests/test_spmd.py;
+    tolerance policy in DESIGN.md §13): the **what-if** body is bitwise
+    against single-device replay, any S — shard-local closed-form
+    gradients, no reduction to reorder — and ``assembly="ppermute"`` is
+    bitwise against ``"all_gather"``.  The **staged-gradient** bodies
+    track single-device replay to ~1 ulp per event even at L = 1: the
+    math is op-for-op identical, but XLA fuses the combine/update chain
+    differently (fma contraction) inside the shard_map body, and L > 1
+    additionally reorders the fp32 combine reduction through the psum's
+    partial-sum tree.  Elastic masks stay branch-free: the
+    trace coefficients ride in replicated and each device slices its
+    block, so cancelled slots fold with weight 0 exactly as on one device.
+
+    The gradient stage intentionally mirrors ``_make_scan_fn.gradients_of``
+    op-for-op (vmapped grad_fn → ONE fp32 cast → member mean) — the
+    duplication is what keeps both paths' pins independent.  What-if
+    replay needs no learner axis at all (closed-form gradients are
+    shard-local); callers plan it with L = 1 and the body never touches
+    "learner".
+    """
+    S, L = plan.shards, plan.learners
+    cl = c // L
+    D = layout.total
+    Dp = -(-D // S)
+    Wl = _spmd_local_width(D, S, ring_impl)
+    from repro.kernels import replay_ring       # lazy: import cycle
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import sharding as sharding_lib
+
+    if assembly not in SPMD_ASSEMBLIES:
+        raise ValueError(f"unknown spmd_assembly {assembly!r}: expected "
+                         f"one of {SPMD_ASSEMBLIES}")
+    mesh = mesh_lib.make_sim_mesh(S, L)
+    coef = jnp.full((c,), 1.0 / c, jnp.float32)
+
+    def coef_of(x):
+        return x["coef"] if masked else coef
+
+    def assemble(mine):
+        if assembly == "ppermute":
+            return optim.ring_all_gather(mine, "ps", S)
+        return jax.lax.all_gather(mine, "ps", axis=0)
+
+    def pulled_weights(rl, x):
+        """(c, D) fp32 pulled weights, assembled from every shard's local
+        gather (pallas pad stripped per shard) — the same moveaxis/reshape
+        assembly as the single-device fused ``slot_weights_flat``."""
+        mine = rl[x["ts"][:, 0]][:, :Dp]              # (c, Dp) local rows
+        parts = assemble(mine)                        # (S, c, Dp)
+        full = jnp.moveaxis(parts, 0, 1).reshape(c, S * Dp)
+        return full[:, :D].astype(jnp.float32)
+
+    def local_gradients(w_full, x, lo):
+        """(cl, D) fp32 gradients of this learner device's slot block —
+        op-for-op the single-device ``gradients_of`` on the block."""
+        wl = jax.lax.dynamic_slice_in_dim(w_full, lo, cl, 0)
+        pulled = flatten.batched_flat_to_tree(wl, layout)
+        if group_size == 1:
+            g = jax.vmap(grad_fn)(pulled, x["batch"])
+            g = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+            return flatten.batched_tree_to_flat(g)
+        g = jax.vmap(lambda p, b: jax.vmap(lambda bb: grad_fn(p, bb))(b))(
+            pulled, x["batch"])
+        g = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+        if member_masked:
+            mc = jax.lax.dynamic_slice_in_dim(x["mcoef"], lo, cl, 0)
+
+            def wmean(a):
+                w = mc.reshape(mc.shape + (1,) * (a.ndim - 2))
+                return (a * w).sum(axis=1)
+            g = jax.tree.map(wmean, g)
+        else:
+            g = jax.tree.map(lambda a: a.mean(axis=1), g)
+        return flatten.batched_tree_to_flat(g)
+
+    def shard_slice(vec, si):
+        """(…, D) → this PS device's (…, Dp) slice (last shard zero-padded,
+        matching the flat-ring layout exactly)."""
+        vp = flatten.pad_flat(vec, S * Dp)
+        return jax.lax.dynamic_slice_in_dim(vp, si * Dp, Dp, vp.ndim - 1)
+
+    def unpack_carry(carry):
+        ring, s, res = carry
+        return (ring[0],
+                None if s is None else s[0],
+                None if res is None else res[0])
+
+    def pack_carry(rl, sl, resl):
+        return (rl[None],
+                None if sl is None else sl[None],
+                None if resl is None else resl[None])
+
+    if whatif:
+        def event(aux, carry, x):
+            rl, sl, resl = unpack_carry(carry)
+            a_l, ws_l = aux[0][0], aux[1][0]
+            ts_col = x["ts"][:, 0]
+            if ring_impl == "pallas" and K >= 2:
+                idx = jnp.concatenate(
+                    [jnp.stack([x["prev"], x["slot"]]), ts_col])
+                rl, sl, resl = replay_ring.ring_apply_whatif(
+                    rl, sl, resl, a_l, ws_l, coef_of(x), x["lrs"], idx,
+                    spec=spec)
+            else:
+                rl, sl, resl = optim.apply_event_ring_whatif(
+                    spec, rl, sl, resl, a_l, ws_l, ts_col, coef_of(x),
+                    x["lrs"], x["prev"], x["slot"])
+            return pack_carry(rl, sl, resl), None
+    else:
+        def event(carry, x):
+            rl, sl, resl = unpack_carry(carry)
+            w = pulled_weights(rl, x)
+            lo = jax.lax.axis_index("learner") * cl
+            g = local_gradients(w, x, lo)             # (cl, D)
+            si = jax.lax.axis_index("ps")
+            if mode == "combine":
+                coef_l = jax.lax.dynamic_slice_in_dim(coef_of(x), lo, cl, 0)
+                ghat = optim.combine_spmd(g, coef_l, "learner")   # (D,)
+                gp = flatten.pad_flat(shard_slice(ghat, si), Wl)[None]
+                cvec = jnp.ones((1,), jnp.float32)
+                lvec = x["lrs"][:1]
+            else:
+                g_all = jax.lax.all_gather(g, "learner", axis=0, tiled=True)
+                gp = flatten.pad_flat(shard_slice(g_all, si), Wl)  # (c, Wl)
+                cvec = coef_of(x)
+                lvec = x["lrs"]
+            if ring_impl == "pallas":
+                idx = jnp.stack([x["prev"], x["slot"]])
+                rl, sl, resl = replay_ring.ring_apply(
+                    rl, sl, resl, gp, cvec, lvec, idx, spec=spec, mode=mode)
+            else:
+                rl, sl, resl = optim.apply_event_ring(
+                    spec, rl, sl, resl, gp, cvec, lvec, x["prev"],
+                    x["slot"], mode)
+            return pack_carry(rl, sl, resl), None
+
+    carry_specs = sharding_lib.spmd_carry_specs()
+    xs_specs = sharding_lib.spmd_xs_specs(xs_keys)
+    if whatif:
+        def run(carry, xs, aux):
+            return jax.lax.scan(functools.partial(event, aux), carry, xs)[0]
+        smapped = mesh_lib.shard_map(
+            run, mesh,
+            in_specs=(carry_specs, xs_specs, sharding_lib.spmd_aux_specs()),
+            out_specs=carry_specs)
+    else:
+        def run(carry, xs):
+            return jax.lax.scan(event, carry, xs)[0]
+        smapped = mesh_lib.shard_map(run, mesh,
+                                     in_specs=(carry_specs, xs_specs),
+                                     out_specs=carry_specs)
+    return jax.jit(smapped, donate_argnums=0)
+
+
 def _materialize_batches(trace: ArrivalTrace, batch_fn: Callable):
     """Evaluate ``batch_fn(learner, minibatch_idx)`` for every trace slot
     and stack into a pytree with leading (steps, c) axes — (steps, c, gs)
@@ -373,7 +572,9 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
            batches=None,
            eval_fn: Optional[Callable] = None,
            eval_every: int = 0,
-           flat_grad=None) -> SimResult:
+           flat_grad=None,
+           placement: Optional[str] = None,
+           spmd_assembly: str = "all_gather") -> SimResult:
     """Execute a scheduled trace against real gradients, compiled.
 
     ``grad_fn(params, batch) -> grads`` must be vmappable (any jit-able JAX
@@ -394,9 +595,21 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
     are computed in-kernel as ``a ⊙ (w_pulled − w*)`` and no data is staged
     — peak memory O(K·D_ring + D), which is what makes trace-driven studies
     at ``configs/`` big-model D feasible.  Requires a kernel-supported
-    optimizer, combine mode, the trivial topology and a non-stock impl;
+    optimizer, combine mode, the trivial topology and a non-stock impl
+    (``placement="spmd"`` lifts the topology restriction: closed-form
+    gradients are shard-local, so every PS device what-ifs its own slice);
     anything else falls back to the staged-gradient path (so ``batch_fn``/
     ``batches`` must still be provided when those conditions can miss).
+
+    ``placement`` (default ``run.placement``) selects where the scan runs
+    (DESIGN.md §13): ``"single"`` is the one-device program above;
+    ``"spmd"`` shard_maps it over a ``make_sim_mesh(S, L)`` device mesh —
+    per-shard rings on distinct "ps" devices, slot blocks on distinct
+    "learner" devices, cross-shard pulls / combine pushes as real
+    all_gather/psum (or ppermute, ``spmd_assembly="ppermute"``)
+    collectives.  What-if spmd replay is bitwise-equal to single-device;
+    staged-gradient paths track it to ~1 ulp/event (XLA fusion inside the
+    shard_map body; psum reduction order at L > 1) — see DESIGN.md §13.
 
     With ``eval_every`` set, the scan runs in eval_every-sized segments;
     a trailing remainder segment (steps % eval_every != 0) has a different
@@ -419,6 +632,18 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
             f"elastic traces replay in 'combine' mode only (cancelled "
             f"slots fold with coefficient 0; sequential optimizer events "
             f"cannot be masked), got mode={trace.mode!r}")
+
+    place = placement if placement is not None else run.placement
+    if place == "spmd":
+        return _replay_spmd(trace, run, spec=spec, opt_state=opt_state,
+                            layout=layout, grad_fn=grad_fn,
+                            init_params=init_params, batch_fn=batch_fn,
+                            batches=batches, eval_fn=eval_fn,
+                            eval_every=eval_every, flat_grad=flat_grad,
+                            assembly=spmd_assembly)
+    if place != "single":
+        raise ValueError(f"unknown placement {place!r}: expected "
+                         f"'single' or 'spmd'")
 
     impl = optim.resolve_ring_impl(run.ring_impl, spec)
     ef = run.ring_dtype == "bf16"
@@ -527,6 +752,112 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
                      trace.minibatches, params, history)
 
 
+def _replay_spmd(trace: ArrivalTrace, run: RunConfig, *, spec, opt_state,
+                 layout, grad_fn, init_params, batch_fn, batches, eval_fn,
+                 eval_every, flat_grad, assembly) -> SimResult:
+    """The ``placement="spmd"`` arm of :func:`replay`: resolve the trace's
+    :func:`placement_plan` against the visible devices, build the sharded
+    ``(S, K, Wl)`` carry, and drive the shard_mapped scan
+    (:func:`_make_spmd_scan_fn`).  Validations shared with the single
+    placement already ran in ``replay``."""
+    steps, c = trace.steps, trace.c
+    K = trace.max_staleness + 1
+    topo = trace.topology
+    S, gs = topo.shards, trace.group_size
+    if not spec.kernel_supported:
+        raise ValueError(
+            f"placement='spmd' needs a kernel-supported optimizer (flat "
+            f"per-shard ring carries); {spec.optimizer!r} has none")
+    # "stock" has no per-device flat ring body; its fused twin is bitwise
+    # at fp32 (RunConfig validation already keeps bf16 off stock)
+    impl = optim.resolve_ring_impl(run.ring_impl, spec)
+    if impl == "stock":
+        impl = "fused"
+    ef = run.ring_dtype == "bf16"
+    whatif = (flat_grad is not None and trace.mode == "combine" and gs == 1)
+    if whatif:
+        kind = flat_grad[0]
+        if kind != "quadratic":
+            raise ValueError(f"unknown flat_grad kind {kind!r}; expected "
+                             f"('quadratic', a, wstar)")
+    elif grad_fn is None:
+        raise ValueError("grad_fn is required outside the what-if replay")
+    elif (batch_fn is None) == (batches is None):
+        raise ValueError("pass exactly one of batch_fn / batches")
+
+    plan = placement_plan(trace, run, jax.device_count())
+    if whatif:
+        # closed-form gradients are shard-local: no learner axis needed
+        plan = PlacementPlan(shards=plan.shards, learners=1, c=c)
+
+    xs = _trace_xs(trace, K, None if whatif else batch_fn,
+                   batches=None if whatif else batches)
+    if xs["ts"].ndim == 2:
+        xs["ts"] = xs["ts"][..., None]      # (steps, c, 1): one shard column
+    scan_fn = _make_spmd_scan_fn(None if whatif else grad_fn, spec,
+                                 trace.mode, c, K, layout, plan,
+                                 tuple(sorted(xs)), group_size=gs,
+                                 masked=trace.valid is not None,
+                                 member_masked=trace.member_valid is not None,
+                                 ring_impl=impl, ring_dtype=run.ring_dtype,
+                                 whatif=whatif, assembly=assembly)
+
+    flat0 = flatten.tree_to_flat(init_params)
+    D = flat0.shape[0]
+    Dp = topo.padded_width(D)
+    Wl = _spmd_local_width(D, S, impl)
+    rdt = jnp.bfloat16 if ef else jnp.float32
+    packed = flatten.pad_flat(flatten.shard_pack(flat0, S, Dp), Wl)  # (S, Wl)
+    q0 = packed.astype(rdt)
+    ring = jnp.tile(q0[:, None, :], (1, K, 1))                   # (S, K, Wl)
+    res0 = (packed - q0.astype(jnp.float32)) if ef else None
+    s0 = None
+    if spec.state_keys:
+        s0 = flatten.pad_flat(
+            flatten.shard_pack(
+                flatten.tree_to_flat(opt_state[spec.state_keys[0]]), S, Dp),
+            Wl)
+    carry = (ring, s0, res0)
+
+    def params_of(carry, done):
+        row = carry[0][:, done % K, :].astype(jnp.float32)       # (S, Wl)
+        if ef:
+            row = row + carry[2]
+        return _unflatten_jit(layout)(flatten.shard_unpack(row[:, :Dp], D))
+
+    aux = None
+    if whatif:
+        aux = (flatten.pad_flat(
+                   flatten.shard_pack(flat_grad[1].astype(jnp.float32),
+                                      S, Dp), Wl),
+               flatten.pad_flat(
+                   flatten.shard_pack(flat_grad[2].astype(jnp.float32),
+                                      S, Dp), Wl))
+
+    def advance(carry, seg):
+        return (scan_fn(carry, seg, aux) if whatif
+                else scan_fn(carry, seg))
+
+    history = []
+    if eval_fn and eval_every:
+        done = 0
+        while done < steps:
+            take = min(eval_every, steps - done)
+            seg = jax.tree.map(lambda a: a[done:done + take], xs)
+            carry = advance(carry, seg)
+            done += take
+            if done % eval_every == 0:
+                history.append({"update": done,
+                                "time": float(trace.event_time[done - 1]),
+                                **eval_fn(params_of(carry, done))})
+    else:
+        carry = advance(carry, xs)
+
+    params = params_of(carry, steps)
+    return SimResult(trace.clock_log(), steps, trace.simulated_time,
+                     trace.minibatches, params, history)
+
+
 def replay_batch(traces: Sequence[ArrivalTrace],
                  runs: Sequence[RunConfig], *,
                  grad_fn: Callable,
@@ -600,6 +931,12 @@ def replay_batch(traces: Sequence[ArrivalTrace],
                 f"batch members must share (ring_impl, ring_dtype): "
                 f"{ring_cfg} vs {(run.ring_impl, run.ring_dtype)} — a bf16 "
                 f"lane's carry has a different dtype/residue layout")
+    for run in runs:
+        if run.placement != "single":
+            raise ValueError(
+                f"batched replay is single-placement only (a lane axis and "
+                f"a device mesh cannot share the carry); replay "
+                f"placement={run.placement!r} specs individually")
     opt_state = optim.init_state(spec, init_params)
     if not spec.kernel_supported:
         raise ValueError(f"{spec.optimizer!r} has no flat lane layout; "

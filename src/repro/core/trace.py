@@ -370,7 +370,39 @@ def schedule(run: RunConfig, steps: int,
     return _schedule_queue(run, steps, topo, members, cur, draw_duration)
 
 
+# RunConfig fields the schedule pass NEVER reads — replay/runtime knobs
+# only.  The lru key canonicalizes them to their defaults so e.g. a
+# ring_impl × ring_dtype sweep over one protocol shape shares ONE cached
+# trace instead of fragmenting the cache.  Every field NOT listed here is
+# part of the cache key (the frozen-dataclass hash covers it), which is the
+# audited guarantee that schedule-relevant fields — protocol, topology,
+# membership, backup, durations, seed, the LR policy inputs — always key
+# distinct traces.  ``tests/test_spmd.py::test_schedule_cached_field_audit``
+# flips every RunConfig field and asserts its classification, so adding a
+# field without triaging it here fails loudly.
+_REPLAY_ONLY_FIELDS = (
+    "momentum", "optimizer", "weight_decay",
+    "ring_dtype", "ring_impl", "placement", "spmd_learners",
+    "num_microbatches", "remat", "fsdp", "use_pallas",
+    "attn_impl", "attn_q_chunk", "attn_kv_chunk", "unroll", "residual_spec",
+)
+
+
+def _schedule_key(run: RunConfig) -> RunConfig:
+    """``run`` with replay-only fields reset to their defaults — the
+    canonical cache key for :func:`schedule_cached`."""
+    fields = {f.name: f for f in dataclasses.fields(RunConfig)}
+    defaults = {name: fields[name].default for name in _REPLAY_ONLY_FIELDS}
+    if all(getattr(run, k) == v for k, v in defaults.items()):
+        return run
+    return run.replace(**defaults)
+
+
 @functools.lru_cache(maxsize=64)
+def _schedule_cached(key: RunConfig, steps: int) -> ArrivalTrace:
+    return schedule(key, steps)
+
+
 def schedule_cached(run: RunConfig, steps: int) -> ArrivalTrace:
     """Memoized :func:`schedule` for the built-in duration models.
 
@@ -379,13 +411,77 @@ def schedule_cached(run: RunConfig, steps: int) -> ArrivalTrace:
     yet the driver re-runs the full Python event queue every time the same
     grid point is replayed — in benchmark/sweep loops that schedule pass
     was a measurable slice of wall clock (~0.15 s per 96-step trace, paid
-    per repeat).  Callers share ONE trace object per (run, steps), so
-    treat it as immutable — which every consumer already does; the arrays
-    are replay *inputs*.  Custom samplers (closures; unhashable, possibly
-    stateful) must keep calling :func:`schedule` directly, as must
-    benchmarks that time the schedule pass itself.
+    per repeat).  The key is the full RunConfig with replay-only fields
+    canonicalized away (``_REPLAY_ONLY_FIELDS``): membership/backup/
+    topology/duration fields all hash into the key, while replay knobs
+    (ring impl/dtype, placement, …) share a single entry.  Callers share
+    ONE trace object per (canonical run, steps), so treat it as immutable —
+    which every consumer already does; the arrays are replay *inputs*.
+    Custom samplers (closures; unhashable, possibly stateful) must keep
+    calling :func:`schedule` directly, as must benchmarks that time the
+    schedule pass itself.
     """
-    return schedule(run, steps)
+    return _schedule_cached(_schedule_key(run), steps)
+
+
+schedule_cached.cache_info = _schedule_cached.cache_info
+schedule_cached.cache_clear = _schedule_cached.cache_clear
+
+
+# ---------------------------------------------------------------------------
+# SPMD placement (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    """Where a trace's replay runs on the emulated cluster: the schedule's
+    topology mapped onto a ``(ps, learner)`` device mesh.  ``shards`` PS
+    devices each own one (K, Dp) ring slice; ``learners`` devices each own
+    a contiguous block of ``slot_block = c // learners`` gradient slots per
+    update.  Host-side and jax-free — the engine turns it into a mesh +
+    PartitionSpecs (launch/mesh.py, launch/sharding.py)."""
+
+    shards: int
+    learners: int
+    c: int
+
+    @property
+    def devices(self) -> int:
+        return self.shards * self.learners
+
+    @property
+    def slot_block(self) -> int:
+        return self.c // self.learners
+
+    def describe(self) -> str:
+        return (f"spmd[{self.shards}ps×{self.learners}learner] "
+                f"slot_block={self.slot_block}")
+
+
+def placement_plan(trace: "ArrivalTrace", run: RunConfig,
+                   device_count: int) -> PlacementPlan:
+    """Resolve the trace's device placement: S from the schedule's topology,
+    L from ``run.spmd_learners`` (0 = auto — the largest divisor of c such
+    that S·L fits ``device_count``)."""
+    topo = trace.topology or Topology()
+    S, c = topo.shards, trace.c
+    if S > device_count:
+        raise RuntimeError(
+            f"placement='spmd' with shards={S} needs {S} devices but only "
+            f"{device_count} are visible; run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={S} or call "
+            f"launch.mesh.ensure_host_devices({S}) before jax initializes")
+    L = run.spmd_learners
+    if L == 0:
+        L = max(d for d in range(1, c + 1)
+                if c % d == 0 and S * d <= device_count)
+    if c % L != 0:
+        raise ValueError(f"spmd_learners={L} must divide c={c}")
+    if S * L > device_count:
+        raise RuntimeError(
+            f"placement plan {S}ps×{L}learner needs {S * L} devices but "
+            f"only {device_count} are visible; lower spmd_learners or raise "
+            f"the host device count (launch.mesh.ensure_host_devices)")
+    return PlacementPlan(shards=S, learners=L, c=c)
 
 
 def _schedule_hardsync(run: RunConfig, steps: int, topo: Topology,

@@ -201,6 +201,9 @@ class _Job:
             # arise with group_size > 1, which is already non-trivial
             return (f"non-trivial topology (shards="
                     f"{self.spec.run.shards}, groups={self.spec.run.groups})")
+        if self.spec.run.placement != "single":
+            return (f"placement={self.spec.run.placement!r} replays on its "
+                    f"own device mesh (no lane axis)")
         return None
 
     def batch_key(self):

@@ -39,6 +39,13 @@ matrices are never materialized, so peak memory drops from O((K + c)·D)
 to O(K·D_bytes + D) and the feasible D grows ~10–100× (EXPERIMENTS.md
 §Sim, max-feasible-D table).
 
+Both kernels are **width-agnostic**: D is whatever the caller's last axis
+is, so under ``placement="spmd"`` (DESIGN.md §13) the engine invokes them
+per-device on the shard-local ``(K, padded_width(⌈D/S⌉))`` ring slice
+inside ``shard_map`` — the grid/BlockSpec machinery never sees the mesh,
+and the elementwise event math guarantees per-shard applies are exactly
+the shard slices of the single-device apply.
+
 Off-accelerator every entry point selects ``interpret=True`` automatically
 (the CPU-CI fallback contract of ``kernels/ops.py``); the module-level
 ``pallas_dispatches``/``last_interpret`` counters record which dispatch

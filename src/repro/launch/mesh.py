@@ -9,7 +9,8 @@ TPU v5e constants used by the roofline (per chip):
 
 from __future__ import annotations
 
-from typing import Tuple
+import os
+from typing import Callable, Tuple
 
 import jax
 
@@ -22,11 +23,85 @@ SINGLE_POD_AXES = ("data", "model")
 MULTI_POD_SHAPE = (2, 16, 16)
 MULTI_POD_AXES = ("pod", "data", "model")
 
+# the emulated-cluster mesh for the SPMD replay (DESIGN.md §13): S parameter-
+# server shards × L learner-group devices on XLA host devices
+SIM_AXES = ("ps", "learner")
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _jax_initialized() -> bool:
+    """Whether a jax backend has already been created (after which the
+    host-platform device count is locked in).  Probes the private backend
+    cache so the probe itself never initializes; unknown layouts (future
+    jax) conservatively report True — the caller then validates against
+    ``jax.device_count()`` instead of silently editing a dead env var."""
+    xb = getattr(getattr(jax, "_src", None), "xla_bridge", None)
+    for attr in ("_backends", "_backend_cache"):
+        cache = getattr(xb, attr, None)
+        if isinstance(cache, dict):
+            return bool(cache)
+    return True
+
+
+def ensure_host_devices(n: int) -> int:
+    """Ensure ≥ n (emulated) host devices, returning the live device count.
+
+    The ``xla_force_host_platform_device_count`` XLA flag (SNIPPETS §3, the
+    dry-run trick) only takes effect BEFORE the first jax backend is
+    created.  Called early, this sets/extends ``XLA_FLAGS`` (keeping an
+    existing larger request) and initializes jax; called after jax is
+    already live with fewer than n devices it raises a RuntimeError that
+    says exactly how to fix the launch — instead of the opaque
+    "mesh shape is larger than the number of devices" failure
+    ``make_debug_mesh`` used to die with."""
+    if n < 1:
+        raise ValueError(f"need at least 1 device, got n={n}")
+    if not _jax_initialized():
+        flags = os.environ.get("XLA_FLAGS", "").split()
+        kept, have = [], 0
+        for f in flags:
+            if f.startswith(_HOST_COUNT_FLAG):
+                try:
+                    have = int(f.split("=", 1)[1])
+                except (IndexError, ValueError):
+                    have = 0
+            else:
+                kept.append(f)
+        want = max(n, have)
+        os.environ["XLA_FLAGS"] = " ".join(
+            kept + [f"{_HOST_COUNT_FLAG}={want}"]).strip()
+    count = jax.device_count()
+    if count < n:
+        raise RuntimeError(
+            f"need {n} devices but jax initialized with {count}: the host "
+            f"device count locks at first backend use, so set "
+            f"XLA_FLAGS={_HOST_COUNT_FLAG}={n} in the environment (or call "
+            f"launch.mesh.ensure_host_devices({n}) before any jax "
+            f"computation / device query)")
+    return count
+
+
+def _require_devices(n: int, what: str) -> None:
+    if jax.device_count() < n:
+        raise RuntimeError(
+            f"{what} needs {n} devices but only {jax.device_count()} are "
+            f"visible; run under XLA_FLAGS={_HOST_COUNT_FLAG}={n} or call "
+            f"launch.mesh.ensure_host_devices({n}) before jax initializes")
+
+
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    # jax.make_mesh landed in 0.4.35; the oldest CI pin predates it
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
     axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
-    return jax.make_mesh(shape, axes)
+    return _make_mesh(shape, axes)
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
@@ -49,5 +124,35 @@ def n_learners(mesh: jax.sharding.Mesh) -> int:
 
 def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count
-    to have been set before jax init)."""
-    return jax.make_mesh((data, model), ("data", "model"))
+    to have been set before jax init — see :func:`ensure_host_devices`)."""
+    _require_devices(data * model, f"debug mesh ({data}×{model})")
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_sim_mesh(ps: int, learners: int) -> jax.sharding.Mesh:
+    """The SPMD-replay cluster: ``ps × learner`` emulated host devices.
+
+    Axis "ps" holds the S parameter-server shards (one (K, Dp) ring slice
+    per device); axis "learner" splits the c gradient slots of an update
+    across learner-group devices (DESIGN.md §13)."""
+    _require_devices(ps * learners, f"sim mesh ({ps}×{learners})")
+    return _make_mesh((ps, learners), SIM_AXES)
+
+
+def shard_map(f: Callable, mesh: jax.sharding.Mesh, *, in_specs,
+              out_specs) -> Callable:
+    """Version-spanning ``shard_map``: prefers ``jax.shard_map`` (0.6+,
+    ``check_vma`` kwarg), falls back to ``jax.experimental.shard_map``
+    (0.4.x, ``check_rep`` kwarg).  Replication checking is disabled either
+    way: the replay out-specs replicate the ring over the learner axis,
+    which the checker cannot prove through a psum-inside-scan body."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

@@ -237,6 +237,46 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+# ---------------------------------------------------------------------------
+# SPMD replay placement specs (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+# The replay scan's carry is (ring, state, residue) with a leading shard
+# axis — (S, K, W) / (S, W) — placed one slice per "ps" device.  The xs
+# pytree replicates the small per-event vectors (timestep indices, LRs,
+# coefficients: O(steps·c) scalars) on every device and shards only the
+# minibatch leaves — (steps, c, …) — over the "learner" axis on the slot
+# dim, so each learner device stages and differentiates just its
+# slot_block slots.  The per-shard pulled-timestamp matrix (steps, c, S)
+# shards its trailing shard axis over "ps": each PS device reads only its
+# own ring's timestamps.
+
+def spmd_carry_specs() -> Tuple[P, P, P]:
+    """(ring, state, residue) specs: every carry leaf shards dim 0 over
+    "ps" (state/residue may be None in the carry — a P over an empty
+    subtree pairs fine)."""
+    return (P("ps"), P("ps"), P("ps"))
+
+
+def spmd_xs_specs(keys) -> Dict[str, Any]:
+    """PartitionSpec dict for a ``_trace_xs`` key set (+ 3-d ts).  The
+    "batch" entry is a pytree *prefix*: one spec broadcast over the whole
+    minibatch subtree."""
+    specs: Dict[str, Any] = {}
+    for key in keys:
+        if key == "ts":
+            specs[key] = P(None, None, "ps")
+        elif key == "batch":
+            specs[key] = P(None, "learner")
+        else:
+            specs[key] = P()
+    return specs
+
+
+def spmd_aux_specs() -> Tuple[P, P]:
+    """(a, wstar) what-if auxiliaries, shard-packed to (S, W): per-"ps"."""
+    return (P("ps"), P("ps"))
+
+
 def default_microbatches(cfg: ModelConfig, shape: InputShape,
                          data_shards: int = 16, model_shards: int = 16,
                          budget_bytes: float = 10e9) -> int:

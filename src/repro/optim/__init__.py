@@ -19,7 +19,8 @@ from repro.optim.backends import (BACKENDS, RING_DTYPES, RING_IMPLS,
                                   apply_event_sharded, apply_round_folded,
                                   apply_single, apply_update,
                                   apply_update_tree, apply_update_flat,
-                                  resolve_ring_impl, sgd_step)
+                                  combine_spmd, resolve_ring_impl,
+                                  ring_all_gather, sgd_step)
 from repro.optim import flatten  # noqa: F401
 
 __all__ = [
@@ -31,4 +32,5 @@ __all__ = [
     "apply_event_flat", "apply_event_ring", "apply_event_ring_whatif",
     "apply_event_sharded", "apply_single",
     "apply_round_folded", "resolve_ring_impl", "sgd_step",
+    "combine_spmd", "ring_all_gather",
 ]

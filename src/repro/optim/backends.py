@@ -249,6 +249,47 @@ def apply_event_sharded(spec: UpdateSpec, w, s, g, coef, lrs,
 
 
 # ---------------------------------------------------------------------------
+# SPMD replay collectives (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def ring_all_gather(x, axis_name: str, size: int):
+    """``lax.all_gather(x, axis_name)`` rebuilt from size − 1 neighbor
+    ``ppermute`` exchanges — the parameter-server ring-pull pattern, where
+    each PS device forwards the slice it just received to its neighbor.
+
+    Returns the (size, *x.shape) stack in device order.  Pure data
+    movement (a permutation, no arithmetic), so the result is **bitwise**
+    equal to ``lax.all_gather`` (pinned by ``tests/test_spmd.py``); it
+    trades one fused collective for S − 1 dependent hops, so the engine
+    uses it only when asked (``spmd_assembly='ppermute'``)."""
+    if size == 1:
+        return x[None]
+    perm = [(i, (i + 1) % size) for i in range(size)]
+    chunks = [x]
+    cur = x
+    for _ in range(size - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+    # chunk k on device i originated at device (i − k) mod size; reorder so
+    # position s holds device s's slice, matching all_gather
+    stacked = jnp.stack(chunks)
+    i = jax.lax.axis_index(axis_name)
+    order = jnp.mod(i - jnp.arange(size), size)
+    return jnp.take(stacked, order, axis=0)
+
+
+def combine_spmd(g, coef, axis_name: str):
+    """The combine-mode einsum ĝ = Σ_j coef_j·g_j with the slot axis split
+    over ``axis_name``: each learner device reduces its local slot block,
+    then one ``psum`` folds the partials.  For a single learner device the
+    psum is the identity and this is bitwise ``apply_event_flat``'s einsum;
+    with L > 1 the partial-sum tree reorders the fp32 reduction (the
+    documented ~1 ulp/event tolerance, DESIGN.md §13)."""
+    part = jnp.einsum("cd,c->d", g.astype(jnp.float32),
+                      coef.astype(jnp.float32))
+    return jax.lax.psum(part, axis_name)
+
+
+# ---------------------------------------------------------------------------
 # pallas backend: one fused kernel launch over the concatenated model
 # ---------------------------------------------------------------------------
 def apply_update_flat(spec: UpdateSpec, params, state, grads: Sequence,
