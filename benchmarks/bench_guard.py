@@ -76,6 +76,11 @@ FLOOR_MARGINS = {
     # absolute spmd throughput on the emulated mesh: wide margin, same
     # rationale as compiled_updates_per_s (CI hardware + core count vary)
     "distributed_replay_updates_per_s": 0.25,
+    # serving-lane throughput (snapshot capture + chunked request eval,
+    # DESIGN.md §14): absolute, wide margin like the other throughputs —
+    # catches the lane collapsing (a per-request recompile, the snapshot
+    # carry forcing a host sync), not runner noise
+    "serving_requests_per_s": 0.25,
 }
 
 
@@ -117,6 +122,8 @@ def measure() -> dict:
     mk = _bench_megakernel(updates=48, lam=16, repeats=3)
     from benchmarks.distributed_replay import measure as _measure_dist
     dist = _measure_dist(updates=32, d=1_000_000, repeats=2, shards=(1, 4))
+    from benchmarks.train_while_serve import measure as _measure_serve
+    serve = _measure_serve(updates=32, requests=512, repeats=2)
     return {
         "metrics": {
             "compiled_updates_per_s": row["compiled_updates_per_s"],
@@ -126,12 +133,14 @@ def measure() -> dict:
             "megakernel_vs_xla_ratio": mk["megakernel_vs_xla_ratio"],
             "distributed_replay_updates_per_s":
                 dist["updates_per_s"]["spmd_s4"],
+            "serving_requests_per_s": serve["requests_per_s"],
         },
         "engine_cell": row,
         "sweep_cell": sweep,
         "elastic_schedule_cell": elastic,
         "megakernel_cell": mk,
         "distributed_replay_cell": dist,
+        "serving_cell": serve,
     }
 
 

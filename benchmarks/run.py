@@ -32,6 +32,7 @@ BENCHES = [
     ("sim_engine", "benchmarks.sim_engine_bench"),  # legacy loop vs compiled replay
     ("topology", "benchmarks.topology_scaling"),  # Rudra base/adv/adv* runtime curves
     ("elastic", "benchmarks.elastic_churn"),  # churn + backup-hardsync curves
+    ("serve", "benchmarks.train_while_serve"),  # staleness-budget serving fleet
     ("distributed", "benchmarks.distributed_replay"),  # spmd replay on the 8-device emulated mesh
     ("bench_guard", "benchmarks.bench_guard"),    # CI perf floor gate
     ("baselines", "benchmarks.baselines"),   # paper sec-6 related work + sec-3.3 accrual
@@ -68,6 +69,8 @@ def main() -> None:
             kwargs = {"updates": 40}
         if args.quick and bid == "distributed":
             kwargs = {"updates": 32, "d": 1_000_000, "repeats": 2}
+        if args.quick and bid == "serve":
+            kwargs = {"epochs": 0.5, "requests": 256}
         mod.run(**kwargs)
         print(f"_meta/{bid}/seconds,{time.time() - t0:.1f},")
         sys.stdout.flush()

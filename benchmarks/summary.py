@@ -142,6 +142,22 @@ def run(epochs: int = 10) -> dict:
              all(claims.values()) if claims else False,
              " ".join(k for k, v in sorted(claims.items()) if not v))
 
+    # ---- train-while-serve (if train_while_serve has run) ------------------
+    serve = os.path.join(RESULTS_DIR, "train_while_serve.json")
+    if os.path.exists(serve):
+        with open(serve) as f:
+            derived = json.load(f).get("derived", {})
+        out["train_while_serve"] = derived
+        for name, s in sorted(derived.get("scenarios", {}).items()):
+            emit(f"summary/serve/{name}",
+                 f"acc={s['serving_accuracy_mean']:.4f}",
+                 f"stale={s['staleness_mean']:.1f} "
+                 f"p99={s['latency_p99_s']:.2f}s")
+        claims = derived.get("claims", {})
+        emit("summary/serve/staleness_tradeoff_holds",
+             all(claims.values()) if claims else False,
+             " ".join(k for k, v in sorted(claims.items()) if not v))
+
     # ---- SPMD distributed replay (if distributed_replay has run) -----------
     dist = os.path.join(RESULTS_DIR, "distributed_replay.json")
     if os.path.exists(dist):

@@ -25,6 +25,7 @@ from typing import Optional, Sequence, Tuple
 
 from repro.membership import MembershipTimeline
 from repro.optim.spec import KERNEL_OPTIMIZERS
+from repro.serve.fleet import FleetConfig
 
 # replay weight-ring knobs (core/engine.py compiled replay, DESIGN.md §12)
 RING_DTYPES = ("fp32", "bf16")
@@ -406,6 +407,15 @@ class RunConfig:
     # reduce-scatter/all-gather pairs and norms/residuals shard over `model`
     # (§Perf iteration B1).  None = no constraint (CPU tests, seq-par mode).
     residual_spec: Optional[tuple] = None
+    # --- train-while-serve (repro.serve; DESIGN.md §14) ---------------------
+    # serving: a FleetConfig attaches a serving fleet to the run — N serving
+    # replicas publishing weight versions from the PS ring under a
+    # PublicationPolicy while inference traffic arrives.  The schedule pass
+    # resolves publications/requests host-side (rng stream independent of
+    # the arrival schedule) and the replay engine captures exactly the
+    # published ring rows; None reproduces the pre-serving engine bit for
+    # bit.
+    serving: Optional[FleetConfig] = None
 
     def __post_init__(self):
         if self.protocol not in ("hardsync", "softsync", "async"):
@@ -480,6 +490,24 @@ class RunConfig:
                     f"spmd_learners={self.spmd_learners} must divide the "
                     f"update width c={self.gradients_per_update} so every "
                     f"learner device owns an equal slot block")
+        if self.serving is not None:
+            if not isinstance(self.serving, FleetConfig):
+                raise ValueError(
+                    f"serving must be a repro.serve.fleet.FleetConfig, "
+                    f"got {type(self.serving).__name__}")
+            if self.placement == "spmd":
+                raise ValueError(
+                    "serving is not supported with placement='spmd': the "
+                    "serving lane captures published ring rows inside the "
+                    "single-device replay scan, which shard_map splits into "
+                    "per-shard (K, Dp) rings; replay the serving trace with "
+                    "placement='single' (the default)")
+            if self.shards > 1 and self.ring_impl == "stock":
+                raise ValueError(
+                    "serving with shards>1 needs the fused ring "
+                    "(ring_impl='auto'/'fused'/'pallas'): the stock sharded "
+                    "scan keeps a (S, K, Dp) ring with no flat row for a "
+                    "publication to read")
         if self.elastic and self.lr_policy == "per_gradient":
             raise ValueError(
                 "per_gradient LRs imply sequential optimizer events, which "

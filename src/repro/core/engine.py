@@ -67,7 +67,7 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
                   shards: int = 1, group_size: int = 1,
                   masked: bool = False, member_masked: bool = False,
                   ring_impl: str = "stock", ring_dtype: str = "fp32",
-                  whatif: bool = False):
+                  whatif: bool = False, publish: bool = False):
     """The jitted scan over update events — cached per static config so
     repeated replays (benchmark/sweep loops) reuse the compiled program;
     the LRU bound keeps long-lived processes from pinning every grad_fn
@@ -261,6 +261,31 @@ def _make_scan_fn(grad_fn, spec, mode: str, c: int, K: int,
                 spec, params, opt_state, grads, coef_of(x), x["lrs"], mode)
             ring = ring.at[x["slot"]].set(flatten.tree_to_flat(params))
             return (ring, (params, opt_state)), None
+
+    if publish:
+        # serving lane (DESIGN.md §14): capture each *published* weight
+        # version as the scan writes it — the ring row is read at its birth
+        # instant, which is exactly what every publication policy resolves
+        # to (a ring read always returns the newest row; the host-side
+        # schedule_serving already mapped refreshes/requests to versions).
+        # x["pub"] indexes the snapshot buffer riding the carry: the
+        # published-version position for rows some replica serves, or the
+        # inert dummy row (branch-free — unpublished rows write there).
+        # Snapshots store the raw ring row in fp32: with a bf16 ring the
+        # published weights are the quantized snapshots, residue excluded
+        # (the serving tolerance policy — §14).
+        if batched or whatif:
+            raise ValueError(
+                "publish capture supports the single-lane staged-gradient "
+                "scan only (replay_batch and the what-if replay reject "
+                "serving traces upstream)")
+        base_event = event
+
+        def event(carry, x):
+            core, snaps = carry
+            core, _ = base_event(core, x)
+            row = core[0][x["slot"]].astype(jnp.float32)
+            return (core, snaps.at[x["pub"]].set(row)), None
 
     # single lane: unroll a few events per while-loop iteration (the body
     # is tiny, loop bookkeeping is a measurable fraction).  The batched
@@ -531,6 +556,12 @@ def _check_trace(trace: ArrivalTrace, run: RunConfig) -> None:
             f"trace LRs/mode ({trace.mode}) disagree with this RunConfig's "
             f"lr_policy={run.lr_policy!r}/base_lr={run.base_lr} — reschedule "
             f"the trace for this config")
+    if (trace.serving is None) != (run.serving is None):
+        raise ValueError(
+            f"trace {'carries' if trace.serving is not None else 'has no'} "
+            f"serving lane but run.serving is "
+            f"{'unset' if run.serving is None else 'set'} — reschedule the "
+            f"trace for this config")
 
 
 def _trace_xs(trace: ArrivalTrace, K: int, batch_fn: Optional[Callable],
@@ -574,7 +605,9 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
            eval_every: int = 0,
            flat_grad=None,
            placement: Optional[str] = None,
-           spmd_assembly: str = "all_gather") -> SimResult:
+           spmd_assembly: str = "all_gather",
+           serve_batches=None,
+           serve_eval_fn: Optional[Callable] = None) -> SimResult:
     """Execute a scheduled trace against real gradients, compiled.
 
     ``grad_fn(params, batch) -> grads`` must be vmappable (any jit-able JAX
@@ -615,8 +648,35 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
     a trailing remainder segment (steps % eval_every != 0) has a different
     scan length and compiles a second program — pick eval_every | steps in
     compile-sensitive sweeps.
+
+    **Serving lane** (DESIGN.md §14): a trace scheduled with
+    ``run.serving`` set carries a resolved ``ServingTrace``; the scan then
+    additionally captures every *published* weight version (a ring-row
+    read at the version's birth — branch-free, one extra
+    dynamic-update-slice per event) and, post-scan, evaluates each request
+    batch against the version that served it.  ``serve_batches`` (a pytree
+    with a leading (R,) request axis, e.g. a problem's ``stage_requests``)
+    and ``serve_eval_fn(params, request_batch) -> scalar metric`` are then
+    required.  A serving trace disables the what-if fast path (the
+    staged-gradient scan carries the snapshot buffer); a run *without*
+    serving compiles the exact pre-serving program — same scan-fn cache
+    entry, bitwise-identical replay.
     """
     _check_trace(trace, run)
+    serving = trace.serving
+    if serving is not None and (serve_batches is None
+                                or serve_eval_fn is None):
+        raise ValueError(
+            "this trace carries a serving lane: pass serve_batches (a "
+            "pytree with a leading (R,) request axis, e.g. "
+            "problem.stage_requests(trace.serving, run.serving)) and "
+            "serve_eval_fn(params, request_batch) -> scalar metric")
+    if serving is None and (serve_batches is not None
+                            or serve_eval_fn is not None):
+        raise ValueError(
+            "serve_batches/serve_eval_fn passed but the trace has no "
+            "serving lane — schedule it from a RunConfig with "
+            "serving=FleetConfig(...)")
     steps, c = trace.steps, trace.c
     K = trace.max_staleness + 1
     topo = trace.topology
@@ -648,7 +708,8 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
     impl = optim.resolve_ring_impl(run.ring_impl, spec)
     ef = run.ring_dtype == "bf16"
     whatif = (flat_grad is not None and impl != "stock"
-              and trace.mode == "combine" and S == 1 and gs == 1)
+              and trace.mode == "combine" and S == 1 and gs == 1
+              and serving is None)
     if whatif:
         kind = flat_grad[0]
         if kind != "quadratic":
@@ -664,10 +725,12 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
                             masked=trace.valid is not None,
                             member_masked=trace.member_valid is not None,
                             ring_impl=impl, ring_dtype=run.ring_dtype,
-                            whatif=whatif)
+                            whatif=whatif, publish=serving is not None)
 
     xs = _trace_xs(trace, K, None if whatif else batch_fn,
                    batches=None if whatif else batches)
+    if serving is not None:
+        xs["pub"] = jnp.asarray(_pub_index(serving, steps), jnp.int32)
     flat0 = flatten.tree_to_flat(init_params)
     D = flat0.shape[0]
     Dp = topo.padded_width(D)
@@ -728,6 +791,22 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
         def params_of(carry, done):
             return carry[1][0]
 
+    if serving is not None:
+        # snapshot buffer riding the carry: one row per published version
+        # (+ the inert dummy row unpublished versions write).  Row 0 is
+        # version 0 — the init weights every replica boots with, i.e. the
+        # ring's initial row (already quantized under a bf16 ring: the
+        # publication tolerance policy).
+        P = int(serving.pub_versions.shape[0])
+        row0 = carry[0][0].astype(jnp.float32)
+        snaps0 = jnp.zeros((P + 1,) + row0.shape, jnp.float32).at[0].set(row0)
+        core_params_of = params_of
+
+        def params_of(carry, done):
+            return core_params_of(carry[0], done)
+
+        carry = (carry, snaps0)
+
     def advance(carry, seg):
         return (scan_fn(carry, seg, aux) if whatif
                 else scan_fn(carry, seg))
@@ -748,8 +827,56 @@ def replay(trace: ArrivalTrace, run: RunConfig, *,
         carry = advance(carry, xs)
 
     params = params_of(carry, steps)
+    serve_result = None
+    if serving is not None:
+        serve_result = _serve_eval(carry[1], layout, D, serving,
+                                   serve_batches, serve_eval_fn)
     return SimResult(trace.clock_log(), steps, trace.simulated_time,
-                     trace.minibatches, params, history)
+                     trace.minibatches, params, history,
+                     serving=serve_result)
+
+
+def _pub_index(serving, steps: int) -> np.ndarray:
+    """(steps,) snapshot-buffer index per scan step: version j + 1 is born
+    when event j fires, so step j writes its new ring row to the version's
+    position in ``pub_versions`` when some replica publishes it, else to
+    the inert dummy row (index P — branch-free capture)."""
+    pv = np.asarray(serving.pub_versions, np.int64)
+    P = pv.shape[0]
+    born = np.arange(1, steps + 1)
+    idx = np.searchsorted(pv, born)
+    hit = (idx < P) & (pv[np.minimum(idx, P - 1)] == born)
+    return np.where(hit, idx, P)
+
+
+def _serve_eval(snaps, layout, D: int, serving, serve_batches,
+                serve_eval_fn, chunk: int = 512):
+    """The serving lane's evaluation stage: map each request batch onto the
+    captured snapshot of the version that served it, in chunked vmap lanes
+    (at most two compiled programs: full chunks + one remainder).  Dropped
+    requests (no live replica) score 0."""
+    from repro.serve.fleet import ServingResult   # lazy: layering
+    rows = snaps[:, :D]                           # (P + 1, D) fp32
+    req_pub = jnp.asarray(serving.req_pub, jnp.int32)
+
+    @jax.jit
+    def lane(idx, batch):
+        def one(i, b):
+            return serve_eval_fn(flatten.flat_to_tree(rows[i], layout), b)
+        return jax.vmap(one)(idx, batch)
+
+    R = serving.n_requests
+    parts = []
+    for lo in range(0, R, chunk):
+        hi = min(lo + chunk, R)
+        part = lane(req_pub[lo:hi],
+                    jax.tree.map(lambda a: jnp.asarray(a)[lo:hi],
+                                 serve_batches))
+        parts.append(np.asarray(part))
+    metric = (np.concatenate(parts) if parts
+              else np.zeros(0, np.float32))
+    metric = np.where(serving.served, metric, 0.0).astype(np.float32)
+    return ServingResult(trace=serving, request_metric=metric)
 
 
 def _replay_spmd(trace: ArrivalTrace, run: RunConfig, *, spec, opt_state,
@@ -764,6 +891,12 @@ def _replay_spmd(trace: ArrivalTrace, run: RunConfig, *, spec, opt_state,
     K = trace.max_staleness + 1
     topo = trace.topology
     S, gs = topo.shards, trace.group_size
+    if trace.serving is not None:
+        raise ValueError(
+            "serving traces cannot replay with placement='spmd': the "
+            "serving lane captures published ring rows inside the "
+            "single-device scan, which shard_map splits into per-shard "
+            "(K, Dp) rings; replay with placement='single' (the default)")
     if not spec.kernel_supported:
         raise ValueError(
             f"placement='spmd' needs a kernel-supported optimizer (flat "
@@ -903,6 +1036,13 @@ def replay_batch(traces: Sequence[ArrivalTrace],
         raise ValueError("traces / runs / batch data must align, non-empty")
     for trace, run in zip(traces, runs):
         _check_trace(trace, run)
+        if trace.serving is not None:
+            raise ValueError(
+                "batched replay does not support serving traces: the "
+                "serving lane adds a per-lane snapshot carry plus a "
+                "post-scan request evaluation; replay serving specs "
+                "individually (the experiment driver excludes them from "
+                "batch cells automatically)")
     steps, c, mode = traces[0].steps, traces[0].c, traces[0].mode
     masked = traces[0].valid is not None
     for trace in traces[1:]:

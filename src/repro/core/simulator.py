@@ -64,6 +64,10 @@ class SimResult:
     minibatches: int
     params: Optional[object] = None
     history: Optional[List[Dict]] = None   # eval trace (sgd mode)
+    # train-while-serve lane (repro.serve, DESIGN.md §14): the ServingResult
+    # of a replay whose trace carried a serving fleet; None otherwise (the
+    # legacy oracle never serves — simulate() rejects serving configs)
+    serving: Optional[object] = None
 
 
 def _default_duration_sampler(rng: np.random.Generator, mu: int):
@@ -91,6 +95,11 @@ def simulate(run: RunConfig,
     ``run.duration_model``; 2-arg ``(rng, mu)`` callables are accepted.
     ``ps_backend`` picks the ``repro.optim`` backend of the host PS.
     """
+    if run.serving is not None and grad_fn is not None:
+        raise ValueError(
+            "the legacy per-arrival oracle has no serving lane; replay a "
+            "serving trace on the compiled engine (engine='compiled' / "
+            "core.engine.replay)")
     if grad_fn is None:                       # measure mode == the schedule
         tr = trace_mod.schedule(run, steps, duration_sampler=duration_sampler)
         return SimResult(tr.clock_log(), tr.steps, tr.simulated_time,

@@ -163,6 +163,12 @@ class ArrivalTrace:
     # docstring)
     valid: Optional[np.ndarray] = None          # (steps, c) bool
     member_valid: Optional[np.ndarray] = None   # (steps, c, gs) bool
+    # train-while-serve lane (DESIGN.md §14): the resolved ServingTrace when
+    # run.serving attached a fleet — publication refreshes, request →
+    # published-version assignments, staleness and latency, all resolved
+    # host-side against this trace's event clock.  None = no serving lane;
+    # the replay engine then compiles the exact pre-serving program.
+    serving: Optional["ServingTrace"] = None
 
     @property
     def steps(self) -> int:
@@ -253,6 +259,13 @@ class ArrivalTrace:
         """Fig.-4 statistics, trace-native (vectorized over the σ matrix;
         cancelled slots are excluded from every statistic)."""
         return VectorClockLog.from_matrix(self.pulled_ts, valid=self.valid)
+
+    def version_at(self, t) -> np.ndarray:
+        """Weight version live at time t: the count of update events fired
+        at or before t (version v ≥ 1 is born when event v − 1 fires; the
+        same-instant tie rule — events apply before reads — is
+        ``side="right"``).  Vectorizes over array t."""
+        return np.searchsorted(self.event_time, t, side="right")
 
 
 # ---------------------------------------------------------------------------
@@ -365,9 +378,19 @@ def schedule(run: RunConfig, steps: int,
                    for m, on in zip(members[p], mask) if on)
 
     if run.protocol == "hardsync":
-        return _schedule_hardsync(run, steps, topo, members, cur,
-                                  draw_duration)
-    return _schedule_queue(run, steps, topo, members, cur, draw_duration)
+        trace = _schedule_hardsync(run, steps, topo, members, cur,
+                                   draw_duration)
+    else:
+        trace = _schedule_queue(run, steps, topo, members, cur,
+                                draw_duration)
+    if run.serving is not None:
+        # serving lane (DESIGN.md §14): resolved AFTER the arrival schedule
+        # from its own rng stream, so attaching a fleet never perturbs the
+        # trace — arrivals with/without serving are bitwise identical
+        from repro.serve.publication import schedule_serving
+        trace = dataclasses.replace(
+            trace, serving=schedule_serving(trace, run.serving, run.seed))
+    return trace
 
 
 # RunConfig fields the schedule pass NEVER reads — replay/runtime knobs

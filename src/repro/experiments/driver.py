@@ -44,7 +44,9 @@ def execute(run_cfg: RunConfig, *,
             eval_fn: Optional[Callable] = None,
             eval_every: int = 0,
             duration_sampler: Optional[Callable] = None,
-            engine: str = "compiled") -> SimResult:
+            engine: str = "compiled",
+            serve_batches=None,
+            serve_eval_fn: Optional[Callable] = None) -> SimResult:
     """Run one simulation from raw callables (no problem registry).
 
     ``engine``: "compiled" (schedule + lax.scan replay; measure-only when
@@ -63,7 +65,8 @@ def execute(run_cfg: RunConfig, *,
         return SimResult(trace.clock_log(), trace.steps,
                          trace.simulated_time, trace.minibatches)
     return replay(trace, run_cfg, grad_fn=grad_fn, init_params=init_params,
-                  batch_fn=batch_fn, eval_fn=eval_fn, eval_every=eval_every)
+                  batch_fn=batch_fn, eval_fn=eval_fn, eval_every=eval_every,
+                  serve_batches=serve_batches, serve_eval_fn=serve_eval_fn)
 
 
 # ---------------------------------------------------------------------------
@@ -99,19 +102,28 @@ def _result(spec: ExperimentSpec, trace: ArrivalTrace,
         params = sim.params
         metrics = dict(problem.eval_fn(params))
         curve = list(sim.history or [])
+    runtime = {"simulated_time": trace.simulated_time,
+               "updates": trace.steps,
+               "minibatches": trace.minibatches,
+               # which execution path produced this record: "batched"
+               # (one vmapped program over a sweep cell), "sequential"
+               # (per-spec compiled replay), "legacy", or "measure" —
+               # the sweep fast path is a ~3.6× cliff, so the record
+               # says which side of it this run landed on
+               "replay_path": replay_path}
+    if sim is not None and sim.serving is not None:
+        # serving lane (DESIGN.md §14): headline numbers into metrics so
+        # sweep tables pick them up, the full summary into runtime
+        summary = sim.serving.summary()
+        metrics["serving_accuracy"] = summary["accuracy"]
+        metrics["serving_staleness_mean"] = summary["staleness_mean"]
+        metrics["serving_latency_p99_s"] = summary["latency_p99_s"]
+        runtime["serving"] = summary
     return RunResult(
         spec=spec.echo(),
         metrics=metrics,
         curve=curve,
-        runtime={"simulated_time": trace.simulated_time,
-                 "updates": trace.steps,
-                 "minibatches": trace.minibatches,
-                 # which execution path produced this record: "batched"
-                 # (one vmapped program over a sweep cell), "sequential"
-                 # (per-spec compiled replay), "legacy", or "measure" —
-                 # the sweep fast path is a ~3.6× cliff, so the record
-                 # says which side of it this run landed on
-                 "replay_path": replay_path},
+        runtime=runtime,
         staleness=_staleness_stats(trace, spec.run),
         params=params,
         trace=trace,
@@ -204,6 +216,10 @@ class _Job:
         if self.spec.run.placement != "single":
             return (f"placement={self.spec.run.placement!r} replays on its "
                     f"own device mesh (no lane axis)")
+        if self.trace.serving is not None:
+            return ("serving lane (run.serving) adds a snapshot carry and "
+                    "a post-scan request evaluation — no vmapped lane "
+                    "layout")
         return None
 
     def batch_key(self):
@@ -245,6 +261,23 @@ class _Job:
         # and hand the problem's closed-form gradient (if any) to the
         # what-if replay path
         staged = self.staged_batches()
+        serve_kw = {}
+        if self.trace.serving is not None:
+            stage_requests = getattr(self.problem, "stage_requests", None)
+            request_metric = getattr(self.problem, "request_metric", None)
+            if stage_requests is None or request_metric is None:
+                raise ValueError(
+                    f"run.serving is set but problem {self.spec.problem!r} "
+                    f"has no serving hooks — implement "
+                    f"stage_requests(serving_trace, fleet, seed) and "
+                    f"request_metric(params, request_batch) (see "
+                    f"MLPProblem), or drop serving from the RunConfig")
+            serve_kw = {
+                "serve_batches": stage_requests(self.trace.serving,
+                                                self.spec.run.serving,
+                                                seed=self.spec.run.seed),
+                "serve_eval_fn": request_metric,
+            }
         sim = replay(self.trace, self.spec.run,
                      grad_fn=self.problem.grad_fn,
                      init_params=self.problem.init,
@@ -252,7 +285,8 @@ class _Job:
                      batches=staged,
                      eval_fn=self.problem.eval_fn,
                      eval_every=self.spec.eval_every,
-                     flat_grad=getattr(self.problem, "flat_grad", None))
+                     flat_grad=getattr(self.problem, "flat_grad", None),
+                     **serve_kw)
         return _result(self.spec, self.trace, sim, self.problem,
                        replay_path="sequential")
 

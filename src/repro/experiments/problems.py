@@ -110,6 +110,29 @@ class MLPProblem:
     def eval_fn(self, p) -> Dict[str, float]:
         return {"test_error": self.test_error(p)}
 
+    # -- serving hooks (train-while-serve, DESIGN.md §14) --------------------
+    _REQUEST_RNG_TAG = 0x53525645
+
+    def stage_requests(self, serving, fleet, seed: int = 0):
+        """One batch of held-out samples per inference request: arrays with
+        a leading (R,) request axis, staged host-side in one draw.  The rng
+        stream is tagged independently of training batches, and the draw
+        depends only on (R, request_samples, seed) — the same traffic asks
+        the same questions whatever publication policy answers them."""
+        rng = np.random.default_rng([seed, self._REQUEST_RNG_TAG])
+        idx = rng.integers(0, self.task.n_test,
+                           (serving.n_requests, fleet.request_samples))
+        return (np.asarray(self.task.x_test)[idx],
+                np.asarray(self.task.y_test)[idx])
+
+    def request_metric(self, p, batch):
+        """Accuracy of one request batch under the published weights —
+        vmappable (the engine maps it over the (R,) request axis)."""
+        x, y = batch
+        h = jnp.tanh(x @ p["w1"] + p["b1"])
+        pred = jnp.argmax(h @ p["w2"] + p["b2"], axis=-1)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
 
 # ---------------------------------------------------------------------------
 # diagonal quadratic: the what-if replay vehicle (DESIGN.md §12)

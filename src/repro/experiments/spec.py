@@ -82,12 +82,14 @@ class ExperimentSpec:
         if self.engine == "legacy" and (self.run.shards > 1
                                         or self.run.group_size > 1
                                         or self.run.elastic
-                                        or self.run.backup):
+                                        or self.run.backup
+                                        or self.run.serving is not None):
             raise ValueError(
                 "engine='legacy' (the per-arrival host PS) models the flat "
-                "static Rudra-base server only; sharded/grouped topologies "
-                "and elastic membership/backup (shards/groups/membership/"
-                "backup on RunConfig) replay on the compiled engine")
+                "static Rudra-base server only; sharded/grouped topologies, "
+                "elastic membership/backup, and serving fleets (shards/"
+                "groups/membership/backup/serving on RunConfig) replay on "
+                "the compiled engine")
 
     def replace(self, **kw) -> "ExperimentSpec":
         """Copy with fields changed; validation re-runs (frozen contract)."""

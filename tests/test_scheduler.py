@@ -47,6 +47,29 @@ def test_continuous_batching_matches_single_request(cfg):
                                                 want[i])
 
 
+def test_scheduler_smoke_fast_lane():
+    """Fast-lane lifecycle smoke (no slow marker): a minimal model, more
+    requests than slots — admission, slot reuse, queue drain, and the
+    step()/run_until_done contract, in seconds.  The decode-parity sweeps
+    stay in the slow lane; this keeps the scheduler from having zero
+    coverage in the fast one."""
+    cfg = _cfg(n_layers=1, d_model=16, n_heads=2, n_kv_heads=1, d_ff=24,
+               vocab_size=32)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(cfg, RUN, params, max_batch=2, max_len=16)
+    assert eng.step() == 0                       # idle engine: no-op
+    rids = [eng.submit([i + 1, i + 2], max_new_tokens=2) for i in range(3)]
+    assert eng.step() == 2                       # both slots admitted
+    done = eng.run_until_done()
+    assert set(done) == set(rids)                # 3rd request reused a slot
+    for rid in rids:
+        req = done[rid]
+        assert req.done and len(req.generated) == 2
+        assert all(0 <= t < cfg.vocab_size for t in req.generated)
+    assert eng.step() == 0                       # drained: idle again
+    assert all(r is None for r in eng.slot_req) and not eng.queue
+
+
 @pytest.mark.slow   # long decode drain; full lane
 def test_slots_reused_and_queue_drains():
     cfg = _cfg()

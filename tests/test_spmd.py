@@ -32,6 +32,7 @@ from repro.core.trace import (_REPLAY_ONLY_FIELDS, _schedule_key,
 from repro.experiments.problems import QuadraticProblem
 from repro.launch import mesh as mesh_lib
 from repro.membership import MembershipTimeline
+from repro.serve.fleet import FleetConfig
 
 DEV = jax.device_count()
 
@@ -363,6 +364,9 @@ _FIELD_FLIPS = {
     "attn_kv_chunk": {"attn_kv_chunk": 512},
     "unroll": {"unroll": True},
     "residual_spec": {"residual_spec": (("data",), None)},
+    # schedule-relevant: the serving lane resolves inside schedule() (the
+    # ServingTrace rides the arrival trace), so fleets key distinct traces
+    "serving": {"serving": FleetConfig(replicas=1)},
 }
 
 
