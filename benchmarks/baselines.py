@@ -1,137 +1,20 @@
-"""Related-work baselines (paper §6) vs n-softsync, plus the §3.3 accrual
-claim and a straggler ablation the paper's homogeneous-cluster assumption
-hides.
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``baselines`` (src/repro/experiments/cells/baselines.py):
 
-Claims examined:
-  * SSP with slack s hard-bounds staleness (≤ s + O(1)) but pays stalls;
-    1-softsync achieves comparable error without blocking.
-  * EASGD converges with unbounded replica drift (damped, not bounded).
-  * Accrual (npush=k at mini-batch μ) ≈ mini-batch kμ — the paper's §3.3
-    argument for why Rudra-adv* refuses to accrue.
-  * Stragglers: a 10× slow learner inflates λ-softsync staleness and
-    hardsync round time; 1-softsync degrades gracefully.
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only baselines
+
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import MLPProblem, emit, save_json, updates_for_epochs
-from repro.config import RunConfig
-from repro.core.baselines import simulate_accrual, simulate_easgd, \
-    simulate_ssp
-from repro.core.simulator import simulate, _default_duration_sampler
-
-
-def run(epochs: int = 8, base_lr: float = 0.35) -> dict:
-    prob = MLPProblem()
-    lam, mu = 16, 16
-    out = {}
-
-    # ---- protocol comparison at matched sample budgets ---------------------
-    budget_updates = updates_for_epochs(epochs, mu, 1, prob.task.n_train)
-
-    soft = simulate(
-        RunConfig(protocol="softsync", n_softsync=1, n_learners=lam,
-                  minibatch=mu, base_lr=base_lr,
-                  lr_policy="staleness_inverse", optimizer="sgd", seed=21),
-        steps=budget_updates // lam, grad_fn=prob.grad_fn,
-        init_params=prob.init, batch_fn=prob.batch_fn_for(mu))
-    out["1-softsync"] = {"err": prob.test_error(soft.params),
-                         "mean_sigma": soft.clock_log.mean_staleness()}
-
-    for slack in (2, 8):
-        ssp = simulate_ssp(
-            RunConfig(protocol="async", n_learners=lam, minibatch=mu,
-                      base_lr=base_lr, lr_policy="staleness_inverse",
-                      optimizer="sgd", seed=21),
-            steps=budget_updates, slack=slack, grad_fn=prob.grad_fn,
-            init_params=prob.init, batch_fn=prob.batch_fn_for(mu))
-        vals = ssp.clock_log.all_staleness_values()
-        out[f"ssp_slack={slack}"] = {
-            "err": prob.test_error(ssp.params),
-            "mean_sigma": ssp.clock_log.mean_staleness(),
-            "max_sigma": float(vals.max()),
-            "stalls": getattr(ssp, "stalls", 0)}
-        emit(f"baselines/ssp_s={slack}/max_staleness", f"{vals.max():.0f}",
-             f"bound~slack+lam; stalls={getattr(ssp, 'stalls', 0)}")
-
-    # SSP only *pays* under heterogeneity: with a 10x straggler the fast
-    # learners hit the slack wall and block (the stall count), which is the
-    # cost 1-softsync never pays.
-    def straggler10(rng, m):
-        base = _default_duration_sampler(rng, m)
-        return base * (10.0 if rng.integers(0, lam) == 0 else 1.0)
-    ssp_slow = simulate_ssp(
-        RunConfig(protocol="async", n_learners=lam, minibatch=mu,
-                  base_lr=base_lr, lr_policy="staleness_inverse",
-                  optimizer="sgd", seed=21),
-        steps=budget_updates // 2, slack=2, grad_fn=prob.grad_fn,
-        init_params=prob.init, batch_fn=prob.batch_fn_for(mu),
-        duration_sampler=straggler10)
-    out["ssp_straggler"] = {"stalls": getattr(ssp_slow, "stalls", 0),
-                            "time": ssp_slow.simulated_time}
-    emit("baselines/ssp_stalls_under_straggler",
-         getattr(ssp_slow, "stalls", 0) > 0,
-         f"stalls={getattr(ssp_slow, 'stalls', 0)} (softsync never blocks)")
-
-    eas = simulate_easgd(
-        RunConfig(protocol="async", n_learners=lam, minibatch=mu,
-                  base_lr=base_lr / 4, optimizer="sgd", seed=21),
-        steps=budget_updates, rho=0.2, grad_fn=prob.grad_fn,
-        init_params=prob.init, batch_fn=prob.batch_fn_for(mu))
-    out["easgd"] = {"err": prob.test_error(eas.params)}
-
-    emit("baselines/1-softsync/err", f"{out['1-softsync']['err']:.4f}", "")
-    emit("baselines/ssp_s=2/err", f"{out['ssp_slack=2']['err']:.4f}", "")
-    emit("baselines/easgd/err", f"{out['easgd']['err']:.4f}", "")
-    ok = (out["1-softsync"]["err"]
-          <= min(out["ssp_slack=2"]["err"], out["easgd"]["err"]) + 0.03)
-    emit("baselines/softsync_competitive", ok,
-         "within 3pts of the best related-work baseline")
-
-    # ---- accrual ≈ bigger μ (§3.3) -----------------------------------------
-    k = 4
-    acc = simulate_accrual(
-        RunConfig(protocol="softsync", n_softsync=1, n_learners=lam,
-                  minibatch=mu, base_lr=base_lr,
-                  lr_policy="staleness_inverse", optimizer="sgd", seed=23),
-        steps=updates_for_epochs(epochs, mu * k, lam, prob.task.n_train),
-        npush=k, grad_fn=prob.grad_fn, init_params=prob.init,
-        batch_fn=prob.batch_fn_for(mu))
-    bigmu = simulate(
-        RunConfig(protocol="softsync", n_softsync=1, n_learners=lam,
-                  minibatch=mu * k, base_lr=base_lr,
-                  lr_policy="staleness_inverse", optimizer="sgd", seed=23),
-        steps=updates_for_epochs(epochs, mu * k, lam, prob.task.n_train),
-        grad_fn=prob.grad_fn, init_params=prob.init,
-        batch_fn=prob.batch_fn_for(mu * k))
-    e_acc, e_big = prob.test_error(acc.params), prob.test_error(bigmu.params)
-    out["accrual_k4"] = {"err": e_acc}
-    out["mu_x4"] = {"err": e_big}
-    emit("baselines/accrual_equals_bigger_mu", abs(e_acc - e_big) < 0.05,
-         f"npush=4@mu16:{e_acc:.4f} vs mu64:{e_big:.4f} (paper §3.3)")
-
-    # ---- straggler ablation -------------------------------------------------
-    def straggler_sampler(rng, m):
-        base = _default_duration_sampler(rng, m)
-        return base * (10.0 if rng.integers(0, lam) == 0 else 1.0)
-
-    meas_uniform = simulate(
-        RunConfig(protocol="softsync", n_softsync=lam, n_learners=lam,
-                  minibatch=mu, seed=29), steps=1500)
-    meas_straggle = simulate(
-        RunConfig(protocol="softsync", n_softsync=lam, n_learners=lam,
-                  minibatch=mu, seed=29), steps=1500,
-        duration_sampler=straggler_sampler)
-    s_u = meas_uniform.clock_log.all_staleness_values().max()
-    s_s = meas_straggle.clock_log.all_staleness_values().max()
-    out["straggler"] = {"max_sigma_uniform": float(s_u),
-                        "max_sigma_straggler": float(s_s)}
-    emit("baselines/straggler_inflates_max_staleness", bool(s_s > s_u),
-         f"{s_u:.0f} -> {s_s:.0f} (heterogeneity breaks the 2n bound)")
-    save_json("baselines", out)
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("baselines", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

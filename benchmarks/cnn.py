@@ -1,132 +1,23 @@
-"""The paper's CIFAR10 CNN (§4.2: caffe cifar10_full — 3×(conv+pool) + fc,
-~90K params) in pure JAX, trained with the protocol stack on a synthetic
-32×32×3 image-teacher task.  This is the architecture-fidelity check for the
-MLP stand-in used by the fast benchmarks: the Fig-5 LR-modulation claim must
-reproduce on the *paper's own network shape* too.
+"""DEPRECATED shim — the paper-shape CNN benchmark now lives in the
+campaign layer as cell ``cnn`` (src/repro/experiments/cells/cnn_fig5.py):
 
-At the defaults (1600 updates, α₀ = 0.15, λ = n = 8) this reproduces the
-paper's Fig-5 headline on the paper's own network: α₀ unmodulated sticks at
-~90% error (the paper's "constant high error rate of 90%"); α₀/⟨σ⟩ reaches
-~7%.  Takes ~9 min on CPU; skipped by ``--quick``.
-    PYTHONPATH=src:. python -m benchmarks.cnn
+    PYTHONPATH=src python -m repro.experiments.campaign extended --only cnn
+
+The CNN building blocks (``init_cnn``/``cnn_forward``/``cnn_loss``) and the
+``ImageTeacher`` task are re-exported here for existing importers
+(tests/test_cnn.py); new code should import from the cells module.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import emit, save_json
-from repro.config import RunConfig
-from repro.core.simulator import simulate
+from repro.experiments.cells.cnn_fig5 import (ImageTeacher,  # noqa: F401
+                                              cnn_forward, cnn_loss,
+                                              init_cnn)
 
 
-# ---------------------------------------------------------------------------
-# the paper's CNN (caffe cifar10_full shape): conv32-pool-conv32-pool-
-# conv64-pool-fc10, ~90K trainable parameters
-# ---------------------------------------------------------------------------
-def init_cnn(key, n_classes: int = 10):
-    ks = jax.random.split(key, 4)
-
-    def conv(k, cin, cout, hw=5):
-        # 0.5×He: keeps initial logit std ~O(1); full He on this 3-stage
-        # conv+pool stack yields std ≈ 3.4 and the first SGD steps kill the
-        # network (observed: gradnorm 83 → dead-ReLU plateau at ln 10)
-        return jax.random.normal(k, (cout, cin, hw, hw)) * (0.5 * np.sqrt(
-            2.0 / (cin * hw * hw)))
-    return {
-        "c1": conv(ks[0], 3, 32), "b1": jnp.zeros((32,)),
-        "c2": conv(ks[1], 32, 32), "b2": jnp.zeros((32,)),
-        "c3": conv(ks[2], 32, 64), "b3": jnp.zeros((64,)),
-        "fc": jax.random.normal(ks[3], (64 * 4 * 4, n_classes)) * 0.02,
-        "fb": jnp.zeros((n_classes,)),
-    }
-
-
-def _conv_pool(x, w, b):
-    y = jax.lax.conv_general_dilated(
-        x, w, window_strides=(1, 1), padding="SAME",
-        dimension_numbers=("NCHW", "OIHW", "NCHW"))
-    y = jax.nn.relu(y + b[None, :, None, None])
-    return jax.lax.reduce_window(
-        y, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
-
-
-def cnn_forward(p, x):
-    """x: (B, 3, 32, 32) -> logits (B, 10)."""
-    h = _conv_pool(x, p["c1"], p["b1"])
-    h = _conv_pool(h, p["c2"], p["b2"])
-    h = _conv_pool(h, p["c3"], p["b3"])
-    return h.reshape(h.shape[0], -1) @ p["fc"] + p["fb"]
-
-
-def cnn_loss(p, batch):
-    x, y = batch
-    logits = cnn_forward(p, x)
-    logz = jax.nn.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
-    return jnp.mean(logz - ll)
-
-
-# ---------------------------------------------------------------------------
-# synthetic image teacher task (fixed random CNN labels)
-# ---------------------------------------------------------------------------
-class ImageTeacher:
-    """Prototype-based 10-class images: x = 0.6·prototype[y] + noise.
-    Learnable by a small CNN with a real margin (Bayes error ≈ 0), which is
-    what the Fig-5 divergence-vs-convergence contrast requires."""
-
-    def __init__(self, n_train: int = 2048, n_test: int = 512, seed: int = 3):
-        rng = np.random.default_rng(seed)
-        protos = rng.normal(0, 1, (10, 3, 32, 32)).astype(np.float32)
-
-        def make(n):
-            y = rng.integers(0, 10, size=n).astype(np.int32)
-            x = 0.6 * protos[y] + rng.normal(0, 1, (n, 3, 32, 32)
-                                             ).astype(np.float32)
-            return x.astype(np.float32), y
-        self.x_train, self.y_train = make(n_train)
-        self.x_test, self.y_test = make(n_test)
-        self.n_train = n_train
-
-    def batch_fn_for(self, mu):
-        def fn(l, step):
-            rng = np.random.default_rng(l * 99991 + step)
-            idx = rng.integers(0, self.n_train, size=mu)
-            return jnp.asarray(self.x_train[idx]), jnp.asarray(
-                self.y_train[idx])
-        return fn
-
-
-def run(updates: int = 1600, base_lr: float = 0.15) -> dict:
-    task = ImageTeacher()
-    params = init_cnn(jax.random.PRNGKey(0))
-    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    emit("cnn/params", n_params, "paper: ~90K")
-    grad_fn = jax.jit(jax.grad(cnn_loss))
-    test_err_fn = jax.jit(lambda p: 1.0 - jnp.mean(
-        (jnp.argmax(cnn_forward(p, jnp.asarray(task.x_test)), -1)
-         == jnp.asarray(task.y_test)).astype(jnp.float32)))
-
-    lam, mu, n = 8, 16, 8
-    out = {"n_params": n_params}
-    for policy in ("const", "staleness_inverse"):
-        cfg = RunConfig(protocol="softsync", n_softsync=n, n_learners=lam,
-                        minibatch=mu, base_lr=base_lr, lr_policy=policy,
-                        optimizer="sgd", seed=1)
-        res = simulate(cfg, steps=updates, grad_fn=grad_fn,
-                       init_params=params, batch_fn=task.batch_fn_for(mu))
-        err = float(test_err_fn(res.params))
-        out[policy] = err
-        emit(f"cnn_fig5/{policy}/test_error", f"{err:.4f}",
-             f"<sigma>={res.clock_log.mean_staleness():.1f}")
-    helps = (not np.isfinite(out["const"])) or \
-        out["staleness_inverse"] <= out["const"] + 1e-6
-    emit("cnn_fig5/modulation_helps_on_paper_cnn", helps,
-         f"{out['staleness_inverse']:.3f} vs {out['const']:.3f}")
-    save_json("cnn_fig5", out)
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("cnn", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

@@ -1,162 +1,21 @@
-"""Elastic clusters on the calibrated Table-1 workload (DESIGN.md §7):
-accuracy/runtime curves for (no churn | 10% crash-restart | backup-b
-hardsync, b ∈ {0, 1, 4}).
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``elastic`` (src/repro/experiments/cells/elastic_churn.py):
 
-The Chen et al. ("Revisiting Distributed Synchronous SGD") story on the
-simulator: at a FIXED update budget, backup-b hardsync commits the first
-λ − b arrivals per round and cancels the stragglers, so every round ends
-at the (λ−b)-th order statistic of the same per-round duration draws
-instead of the max — runtime strictly below b = 0, while each update still
-averages λ − b gradients, so the accuracy cost is negligible for small b
-(the ordering the paper's §6 cites as the synchronous answer to staleness).
-The crash-restart scenario runs the same workload through a 10%-of-λ
-crash + restart timeline on 1-softsync: dropped in-flight pushes and a
-re-pull on restart, with the n-softsync threshold tracking λ(t).
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only elastic
 
-Every scenario runs on the calibrated ``base`` architecture cost model in
-the paper's Table-1 adversarial communication setting (μ = 4, 300 MB
-model), multi-seed; results land in ``benchmarks/results/elastic_churn.json``
-(RunResult records + derived claims), surfaced by ``benchmarks/summary.py``.
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import emit, save_results, updates_for_epochs
-from repro.config import RunConfig
-from repro.experiments import ExperimentSpec, Sweep, run_sweep
-from repro.experiments import run as run_spec
-from repro.membership import MembershipTimeline
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("elastic", params=kwargs or None, force=True)
 
-LAM = 16
-MU = 4
-EPOCHS = 2.0
-MODEL_MB = 300            # Table-1 adversarial model size
-DURATION = f"calibrated:base:{MODEL_MB}mb"
-SEEDS = (0, 1, 2)
-BACKUPS = (0, 1, 4)
-CRASH_FRACTION = 0.10     # 10% of λ crash-restarts
-EVAL_EVERY = 32
-
-
-def _steps(run_cfg: RunConfig) -> int:
-    from repro.experiments import get_problem
-    dataset = get_problem("mlp_teacher").dataset_size
-    return updates_for_epochs(EPOCHS, MU, run_cfg.gradients_per_update,
-                              dataset, group_size=run_cfg.group_size)
-
-
-def _spec(run_cfg: RunConfig, steps: int, tag: str) -> ExperimentSpec:
-    return ExperimentSpec(run=run_cfg, problem="mlp_teacher", steps=steps,
-                          duration=DURATION, eval_every=EVAL_EVERY, tag=tag)
-
-
-def _crash_timeline(horizon: float) -> MembershipTimeline:
-    """10% of λ crash a quarter of the way in, restart after 20% of the
-    horizon (timed off a dry no-churn schedule so the window is in-run)."""
-    n_crash = max(1, int(round(CRASH_FRACTION * LAM)))
-    victims = range(n_crash)
-    return MembershipTimeline.crash_restart(
-        victims, crash_at=0.25 * horizon, restart_after=0.20 * horizon)
-
-
-def _mean_std(rows):
-    errs = [r.metrics["test_error"] for r in rows]
-    times = [r.runtime["simulated_time"] for r in rows]
-    return {"test_error_mean": float(np.mean(errs)),
-            "test_error_std": float(np.std(errs)),
-            "train_s_mean": float(np.mean(times)),
-            "train_s_std": float(np.std(times)),
-            "curve": rows[0].curve}
-
-
-def run_bench() -> dict:
-    soft = RunConfig(protocol="softsync", n_softsync=1, n_learners=LAM,
-                     minibatch=MU, base_lr=0.05,
-                     lr_policy="staleness_inverse", optimizer="momentum")
-    soft_steps = _steps(soft)
-    # horizon for the churn window: a dry (measure-mode) schedule
-    dry = run_spec(ExperimentSpec(run=soft, steps=soft_steps,
-                                  duration=DURATION))
-    churn = _crash_timeline(dry.runtime["simulated_time"])
-
-    hard = RunConfig(protocol="hardsync", n_learners=LAM, minibatch=MU,
-                     base_lr=0.05, lr_policy="sqrt_scale",
-                     optimizer="momentum")
-    # FIXED update budget across b (Chen et al. compare per iteration):
-    # the runtime axis then isolates the straggler cancellation
-    hard_steps = _steps(hard)
-
-    scenarios = {
-        "none": Sweep.over(_spec(soft, soft_steps, "none"), seed=SEEDS),
-        "crash_restart": Sweep.over(
-            _spec(soft.replace(membership=churn), soft_steps,
-                  "crash_restart"), seed=SEEDS),
-        **{f"hardsync_b{b}": Sweep.over(
-            _spec(hard.replace(backup=b), hard_steps, f"hardsync_b{b}"),
-            seed=SEEDS)
-           for b in BACKUPS},
-    }
-
-    records, stats = [], {}
-    for name, sweep in scenarios.items():
-        rows = run_sweep(sweep)
-        records.extend(rows)
-        stats[name] = _mean_std(rows)
-        emit(f"elastic_churn/{name}",
-             f"err={stats[name]['test_error_mean']:.4f}",
-             f"train_s={stats[name]['train_s_mean']:.0f} "
-             f"std={stats[name]['test_error_std']:.4f}")
-
-    t = {b: stats[f"hardsync_b{b}"]["train_s_mean"] for b in BACKUPS}
-    e = {b: stats[f"hardsync_b{b}"]["test_error_mean"] for b in BACKUPS}
-    # seed-to-seed spread: b = 0 hardsync is deterministic given the data
-    # hashing (its trace is seed-independent), so the band comes from the
-    # scenarios with real schedule stochasticity (which learners commit)
-    noise = 2.0 * max(stats["hardsync_b0"]["test_error_std"],
-                      stats["hardsync_b1"]["test_error_std"],
-                      stats["none"]["test_error_std"], 1e-3)
-    claims = {
-        # the Chen et al. ordering: every backup level strictly buys
-        # runtime (same seed ⇒ same round draws, lower order statistic)
-        "backup_runtime_strictly_decreasing":
-            t[4] < t[1] < t[0],
-        # ...and b = 1 already recovers a large share of the b = 4 win
-        # (the straggler tail is in the top order statistic)
-        "backup1_buys_most_of_the_gap":
-            (t[0] - t[1]) >= 0.35 * (t[0] - t[4]),
-        # negligible accuracy cost at small b: within the seed noise band
-        "backup1_accuracy_within_noise":
-            abs(e[1] - e[0]) <= noise,
-        # crash-restart churn: the run completes and converges in the same
-        # regime as the static cluster (the elastic schedule is not a
-        # degenerate trace)
-        "crash_restart_converges":
-            (stats["crash_restart"]["test_error_mean"]
-             <= stats["none"]["test_error_mean"] + 0.05),
-    }
-    for k, v in claims.items():
-        emit(f"elastic_churn/claims/{k}", v)
-
-    derived = {
-        "lambda": LAM, "mu": MU, "epochs": EPOCHS, "model_mb": MODEL_MB,
-        "seeds": list(SEEDS), "backups": list(BACKUPS),
-        "updates": {"softsync": soft_steps, "hardsync": hard_steps},
-        "churn_timeline": [dataclass_row(ev) for ev in churn.events],
-        "scenarios": stats, "claims": claims,
-        "noise_band": noise,
-    }
-    save_results("elastic_churn", records=records, derived=derived)
-    return derived
-
-
-def dataclass_row(ev):
-    return {"t": ev.t, "learner": ev.learner, "kind": ev.kind}
-
-
-# benchmarks.run drives modules via their ``run`` attribute
-run = run_bench
 
 if __name__ == "__main__":
-    run_bench()
+    run()

@@ -1,212 +1,20 @@
-"""Kernel-level benchmark: wall-clock of the XLA fallback paths on CPU
-(chunked vs naive attention, chunked vs recurrent SSD/WKV) and the fused
-ps_update's analytic HBM-traffic saving — the quantity the TPU kernel buys.
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``kernels`` (src/repro/experiments/cells/kernel_bench.py):
 
-Timings are real (CPU); the ps_update traffic model is derived (TPU target),
-matching the paper's PS applyUpdate hot-spot analysis.
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only kernels
+
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import emit, save_json
-
-
-def _time(fn, *args, reps: int = 5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6   # µs
-
-
-def run() -> dict:
-    out = {}
-    key = jax.random.PRNGKey(0)
-    ks = jax.random.split(key, 8)
-
-    # --- attention: naive vs chunked (memory-bound difference) -------------
-    from repro.models.attention import chunked_attention, naive_attention
-    B, S, H, KV, D = 1, 1024, 8, 4, 64
-    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
-    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
-    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
-    t_naive = _time(jax.jit(lambda q, k, v: naive_attention(
-        q, k, v, causal=True)), q, k, v)
-    t_chunk = _time(jax.jit(lambda q, k, v: chunked_attention(
-        q, k, v, causal=True, q_chunk=256, kv_chunk=256)), q, k, v)
-    out["attention"] = {"naive_us": t_naive, "chunked_us": t_chunk}
-    emit("kernel/attention_naive", f"{t_naive:.0f}us", f"S={S}")
-    emit("kernel/attention_chunked", f"{t_chunk:.0f}us",
-         "peak-mem O(S*chunk) vs O(S^2)")
-
-    # --- ssd: chunked vs recurrent ------------------------------------------
-    from repro.kernels.ref import ssm_ref
-    from repro.models.ssm import ssd_chunked
-    Bt, Ss, Hs, P, N = 2, 2048, 4, 32, 32
-    x = jax.random.normal(ks[3], (Bt, Ss, Hs, P)) * 0.3
-    a = -jnp.abs(jax.random.normal(ks[4], (Bt, Ss, Hs))) * 0.1
-    Bm = jax.random.normal(ks[5], (Bt, Ss, N)) * 0.3
-    Cm = jax.random.normal(ks[6], (Bt, Ss, N)) * 0.3
-    t_rec = _time(jax.jit(lambda *t: ssm_ref(*t)[0]), x, a, Bm, Cm)
-    t_chk = _time(jax.jit(lambda *t: ssd_chunked(*t, chunk=128)[0]),
-                  x, a, Bm, Cm)
-    out["ssd"] = {"recurrent_us": t_rec, "chunked_us": t_chk,
-                  "speedup": t_rec / t_chk}
-    emit("kernel/ssd_recurrent", f"{t_rec:.0f}us", f"S={Ss}")
-    emit("kernel/ssd_chunked", f"{t_chk:.0f}us",
-         f"speedup={t_rec/t_chk:.1f}x")
-
-    # --- ps_update fused traffic model --------------------------------------
-    # Unfused PS applyUpdate: read W, read V, read each of c grads, write
-    # partial sums (c-1 round trips), write V, write W
-    #   = (2c + 3) * model_bytes   (sum materialized between each add)
-    # Fused kernel: read W, V, c grads once; write W, V once
-    #   = (c + 4) * model_bytes
-    for c in (2, 4, 8, 15, 30):
-        unfused = 2 * c + 3
-        fused = c + 4
-        out[f"ps_update_c={c}"] = {"unfused_passes": unfused,
-                                   "fused_passes": fused,
-                                   "traffic_reduction": unfused / fused}
-        emit(f"kernel/ps_update_c={c}/traffic_reduction",
-             f"{unfused/fused:.2f}x",
-             f"{unfused}->{fused} model-size HBM passes")
-
-    # interpret-mode correctness timing (not perf — CPU emulation)
-    from repro.kernels import ops, ref as kref
-    Dp = 1 << 16
-    w = jax.random.normal(ks[7], (Dp,))
-    vv = jnp.zeros((Dp,))
-    g = jax.random.normal(ks[0], (4, Dp))
-    coef = jnp.array([1.0, 0.5, 0.33, 0.25])
-    w2, v2 = ops.ps_update(w, vv, g, coef, momentum=0.9, lr=0.1)
-    w2r, v2r = kref.ps_update_ref(w, vv, g, coef, momentum=0.9, lr=0.1)
-    ok = bool(jnp.allclose(w2, w2r, atol=1e-5))
-    emit("kernel/ps_update_interpret_allclose", ok, "")
-    out["ps_update_allclose"] = ok
-
-    # --- ps_update fused vs unfused: TIMED (CPU; interpret-mode proxy) -----
-    # unfused = the seed's semantics: materialize each partial sum of the
-    # staleness-weighted reduction, then the optimizer step (2c+3 model-size
-    # passes).  fused = one repro.optim pallas dispatch over the same flat
-    # buffer.  On TPU the gap is the HBM-traffic model above; the CPU timing
-    # recorded here only demonstrates both paths are real and equivalent.
-    from repro.optim import UpdateSpec
-    Db, cb = 1 << 18, 8
-    wb = jax.random.normal(ks[1], (Db,))
-    vb = jnp.zeros((Db,))
-    gb = jax.random.normal(ks[2], (cb, Db)) * 0.1
-    coefb = jnp.abs(jax.random.normal(ks[3], (cb,))) + 0.1
-    lrsb = jnp.full((cb,), 0.05)
-    spec = UpdateSpec(optimizer="momentum")
-
-    @jax.jit
-    def unfused(w, v, g, coef):
-        acc = jnp.zeros_like(w)
-        for i in range(cb):                  # c materialized partial sums
-            acc = acc + coef[i] * g[i]
-        v = spec.momentum * v + acc
-        return w - 0.05 * v, v
-
-    @jax.jit
-    def fused(w, v, g, coef, lrs):
-        from repro.kernels import ps_update as _psu
-        return _psu.ps_apply(w, v, g, coef, lrs, spec=spec, mode="combine",
-                             interpret=jax.default_backend() != "tpu")
-
-    wu, vu = unfused(wb, vb, gb, coefb)
-    wf, vf = fused(wb, vb, gb, coefb, lrsb)
-    match = bool(jnp.allclose(wu, wf, atol=1e-5)
-                 and jnp.allclose(vu, vf, atol=1e-5))
-    t_unfused = _time(unfused, wb, vb, gb, coefb)
-    t_fused = _time(fused, wb, vb, gb, coefb, lrsb)
-    out["ps_update_timed"] = {
-        "D": Db, "c": cb, "unfused_us": t_unfused, "fused_us": t_fused,
-        "cpu_ratio": t_unfused / t_fused, "allclose": match,
-        "note": "CPU wall-clock; TPU benefit is the HBM traffic model above"}
-    emit("kernel/ps_update_unfused", f"{t_unfused:.0f}us",
-         f"D=2^18 c={cb} multi-pass")
-    emit("kernel/ps_update_fused", f"{t_fused:.0f}us",
-         f"single pallas dispatch, allclose={match}")
-
-    # --- replay megakernel: ring event vs stock chain (DESIGN.md §12) ------
-    # One fused ring-read -> combine -> optimizer update -> ring-write event
-    # (kernels/replay_ring, interpret mode on CPU) vs the stock XLA chain
-    # the replay scan used before: gather row, apply_event_flat, .at[].set.
-    # Also times the bf16 compressed ring with its error-feedback residue
-    # (half the ring HBM traffic; the fp32 master chain stays exact).
-    from repro.kernels import replay_ring
-    from repro.optim import apply_event_flat
-    spec_mk = UpdateSpec(optimizer="momentum")
-    Kr, cr = 8, 8
-    Dr = replay_ring.padded_width(1 << 18)
-    ring0 = jax.random.normal(ks[4], (Kr, Dr), jnp.float32)
-    s_mk = jnp.zeros((Dr,))
-    g_mk = jax.random.normal(ks[5], (cr, Dr)) * 0.1
-    coef_mk = jnp.full((cr,), 1.0 / cr)
-    lrs_mk = jnp.full((cr,), 0.05)
-    idx_mk = jnp.array([2, 3], jnp.int32)
-
-    @jax.jit
-    def stock_event(ring, s):
-        w, s2 = apply_event_flat(spec_mk, ring[2], s, g_mk, coef_mk, lrs_mk,
-                                 "combine")
-        return ring.at[3].set(w), s2
-
-    @jax.jit
-    def mega_event(ring, s):
-        ring2, s2, _ = replay_ring.ring_apply(
-            ring, s, None, g_mk, coef_mk, lrs_mk, idx_mk,
-            spec=spec_mk, mode="combine")
-        return ring2, s2
-
-    rs_, ss_ = stock_event(ring0, s_mk)
-    rm_, sm_ = mega_event(ring0, s_mk)
-    mk_bitwise = bool((rs_ == rm_).all() and (ss_ == sm_).all())
-    t_stock = _time(stock_event, ring0, s_mk)
-    t_mega = _time(mega_event, ring0, s_mk)
-
-    ring_bf = ring0.astype(jnp.bfloat16)
-    res0 = (ring0[2] - ring_bf[2].astype(jnp.float32))
-
-    @jax.jit
-    def mega_event_bf16(ring, s, res):
-        return replay_ring.ring_apply(
-            ring, s, res, g_mk, coef_mk, lrs_mk, idx_mk,
-            spec=spec_mk, mode="combine")
-    rb_, sb_, resb_ = mega_event_bf16(ring_bf, s_mk, res0)
-    # master chain: bf16 row + residue reconstructs the exact fp32 update
-    master = rb_[3].astype(jnp.float32) + resb_
-    bf16_exact = bool((master == rs_[3]).all())
-    t_bf16 = _time(mega_event_bf16, ring_bf, s_mk, res0)
-
-    from repro.launch.roofline import ring_bytes as _ring_bytes
-    out["replay_megakernel"] = {
-        "D": Dr, "K": Kr, "c": cr,
-        "stock_us": t_stock, "megakernel_us": t_mega, "bf16_us": t_bf16,
-        "fp32_bitwise": mk_bitwise, "bf16_master_exact": bf16_exact,
-        "ring_bytes_fp32": _ring_bytes(Kr, Dr, "fp32",
-                                       "momentum")["total_bytes"],
-        "ring_bytes_bf16": _ring_bytes(Kr, Dr, "bf16",
-                                       "momentum")["total_bytes"],
-        "note": "CPU interpret-mode wall clock; the TPU win is one kernel "
-                "launch + K*D ring traffic halved at bf16"}
-    emit("kernel/replay_megakernel_fp32", f"{t_mega:.0f}us",
-         f"stock={t_stock:.0f}us bitwise={mk_bitwise} D=2^18 c={cr} K={Kr}")
-    emit("kernel/replay_megakernel_bf16", f"{t_bf16:.0f}us",
-         f"master_exact={bf16_exact} ring_bytes "
-         f"{out['replay_megakernel']['ring_bytes_fp32']}"
-         f"->{out['replay_megakernel']['ring_bytes_bf16']}")
-
-    save_json("kernel_bench", out)
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("kernels", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

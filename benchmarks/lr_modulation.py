@@ -1,75 +1,20 @@
-"""Paper Fig. 5: dividing the learning rate by ⟨σ⟩ = n (Eq. 6) rescues
-convergence for the n-softsync protocol; α₀ at n = λ diverges.
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``fig5`` (src/repro/experiments/cells/fig5_lr_modulation.py):
 
-Reproduced on the teacher-classification task with λ = 30 learners, driven
-through the experiment surface (``ExperimentSpec`` → ``run_sweep``,
-DESIGN.md §5); the compiled-engine equivalence with the per-arrival oracle
-is pinned by ``tests/test_trace_engine.py``.  Also measures footnote 3's
-per-gradient α₀/σ_g modulation (suggested, never evaluated in the paper).
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only fig5
+
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import emit, save_results
-from repro.config import RunConfig
-from repro.experiments import ExperimentSpec, run_sweep
-
-
-def run(epochs: int = 12, base_lr: float = 2.0) -> dict:
-    """base_lr intentionally aggressive: the paper's Fig. 5 point is that the
-    UNMODULATED rate diverges at high staleness while α₀/n converges."""
-    lam, mu = 30, 32
-    grid = [(n, policy)
-            for n in [4, lam]
-            for policy in ["const", "staleness_inverse", "per_gradient"]]
-    specs = []
-    for n, policy in grid:
-        spec = ExperimentSpec(
-            run=RunConfig(protocol="softsync", n_softsync=n, n_learners=lam,
-                          minibatch=mu, base_lr=base_lr, lr_policy=policy,
-                          optimizer="sgd", seed=5),
-            problem="mlp_teacher", epochs=epochs, tag=f"n={n}/{policy}")
-        # error-vs-updates curve at ~10 points (per_gradient runs final-only,
-        # matching the paper's footnote-3 spot check).  eval_every must
-        # divide steps: the trailing remainder segment would compile a
-        # second scan program AND lose the final curve point (replay only
-        # evals on whole eval_every multiples) — pick the nearest divisor.
-        if policy != "per_gradient":
-            steps = spec.resolved_steps()
-            target = max(1, steps // 10)
-            eval_every = min((d for d in range(1, steps + 1)
-                              if steps % d == 0),
-                             key=lambda d: abs(d - target))
-            spec = spec.replace(eval_every=eval_every)
-        specs.append(spec)
-    results = run_sweep(specs)
-
-    out = {}
-    for res in results:
-        final = res.metrics["test_error"]
-        out[res.tag] = {
-            "final_test_error": final,
-            "trace": res.curve,
-            "mean_staleness": res.staleness["mean"],
-        }
-        emit(f"fig5/{res.tag}/test_error",
-             f"{final:.4f}" if np.isfinite(final) else "diverged", "")
-    # claims
-    for n in [4, lam]:
-        e_mod = out[f"n={n}/staleness_inverse"]["final_test_error"]
-        e_const = out[f"n={n}/const"]["final_test_error"]
-        better = (not np.isfinite(e_const)) or e_mod <= e_const + 1e-6
-        emit(f"fig5/n={n}/modulation_helps", better,
-             f"alpha0/n:{e_mod:.3f} vs alpha0:{e_const:.3f}")
-        # footnote 3 (beyond-paper evaluation): per-gradient α₀/σ_g
-        e_pg = out[f"n={n}/per_gradient"]["final_test_error"]
-        emit(f"fig5fn3/n={n}/per_gradient_vs_mean", f"{e_pg:.4f}",
-             f"mean-mod:{e_mod:.4f} "
-             f"{'BETTER' if e_pg < e_mod else 'comparable/worse'}")
-    save_results("fig5_lr_modulation", records=results, derived=out)
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("fig5", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

@@ -1,58 +1,20 @@
-"""Paper Table 2 / §5.3: μλ = constant ⇒ ≈ constant test error, largely
-independent of staleness σ; error grows monotonically with the μλ product.
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``table2`` (src/repro/experiments/cells/table2_mu_lambda.py):
 
-Configurations mirror the paper's table scaled to the teacher task (groups
-μλ ≈ {128, 512, 4096} with σ ∈ {1, λ}), driven through the experiment
-surface (``ExperimentSpec`` → ``run_sweep``, DESIGN.md §5).
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only table2
+
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import emit, save_results
-from repro.config import RunConfig
-from repro.experiments import ExperimentSpec, run_sweep
-
-
-def run(epochs: int = 10, base_lr: float = 0.35) -> dict:
-    groups = {
-        128: [(1, 4, 32), (32, 4, 32), (8, 16, 8), (1, 128, 1)],
-        512: [(1, 16, 32), (32, 16, 32), (8, 64, 8), (1, 128, 4)],
-        4096: [(1, 128, 32), (32, 128, 32), (8, 256, 16)],
-    }
-    specs, slots = [], []
-    for prod, cfgs in groups.items():
-        for (n, mu, lam) in cfgs:
-            specs.append(ExperimentSpec(
-                run=RunConfig(protocol="softsync", n_softsync=n,
-                              n_learners=lam, minibatch=mu, base_lr=base_lr,
-                              lr_policy="staleness_inverse", optimizer="sgd",
-                              seed=9),
-                problem="mlp_teacher", epochs=epochs,
-                tag=f"prod={prod}/n={n}/mu={mu}/lam={lam}"))
-            slots.append((prod, n, mu, lam))
-    results = run_sweep(specs)
-
-    out = {}
-    errs_by_prod = {prod: [] for prod in groups}
-    for (prod, n, mu, lam), res in zip(slots, results):
-        err, sig = res.metrics["test_error"], res.staleness["mean"]
-        out[res.tag] = {"test_error": err, "measured_staleness": sig}
-        errs_by_prod[prod].append(err)
-        emit(f"table2/prod={prod}/sigma={n}/mu={mu}/lam={lam}",
-             f"{err:.4f}", f"<sigma>={sig:.1f}")
-    for prod, errs in errs_by_prod.items():
-        spread = float(np.max(errs) - np.min(errs))
-        out[f"prod={prod}/spread"] = spread
-        emit(f"table2/prod={prod}/error_spread", f"{spread:.4f}",
-             "claim:small-within-group")
-    mean_small = float(np.mean(errs_by_prod[128]))
-    mean_big = float(np.mean(errs_by_prod[4096]))
-    emit("table2/error_grows_with_product", mean_big > mean_small,
-         f"128:{mean_small:.3f} 4096:{mean_big:.3f}")
-    save_results("table2_mu_lambda", records=results, derived=out)
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("table2", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

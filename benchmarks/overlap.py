@@ -1,29 +1,20 @@
-"""Paper Table 1: communication overlap for Rudra-base / -adv / -adv* in the
-adversarial scenario (μ = 4, 300 MB model, ~60 learners).
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``table1`` (src/repro/experiments/cells/table1_overlap.py):
 
-Paper: base 11.52 %, adv 56.75 %, adv* 99.56 %.
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only table1
+
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit, save_json
-from repro.core import tradeoff as to
 
-
-def run() -> dict:
-    wl = to.WorkloadModel(model_bytes=300e6)
-    out = {}
-    paper = {"base": 0.1152, "adv": 0.5675, "adv*": 0.9956}
-    for arch in ("base", "adv", "adv*"):
-        o = to.communication_overlap(arch, 4, 60, wl=wl)
-        out[arch] = {"overlap": o, "paper": paper[arch]}
-        emit(f"table1/{arch}/overlap", f"{o:.4f}", f"paper:{paper[arch]}")
-    ordered = out["base"]["overlap"] < out["adv"]["overlap"] \
-        < out["adv*"]["overlap"]
-    emit("table1/ordering_base<adv<adv*", ordered, "")
-    emit("table1/adv*_near_full_overlap", out["adv*"]["overlap"] > 0.95, "")
-    save_json("table1_overlap", out)
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("table1", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

@@ -1,81 +1,54 @@
-# One function per paper table/figure. Prints ``name,value,derived`` CSV and
-# writes JSON artifacts to benchmarks/results/.
+# DEPRECATED shim over the campaign CLI (DESIGN.md section 15).  The paper
+# grid is now a content-addressed spec-graph:
+#
+#   PYTHONPATH=src python -m repro.experiments.campaign paper [--only CELL]
+#       [--force] [--quick] [--dry-run]
+#
+# This wrapper keeps the old invocation working:
 #
 #   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,table2,...]
 #
-# Mapping (DESIGN.md section 11):
-#   fig4   -> staleness_distribution   (<sigma> ~= n, sigma <= 2n)
-#   fig5   -> lr_modulation            (alpha0/n rescues convergence)
-#   fig6_7 -> tradeoff_curves          ((sigma, mu, lambda) error/time curves)
-#   fig8   -> speedup                  (protocol speed-ups vs lambda)
-#   table1 -> overlap                  (comm/compute overlap base/adv/adv*)
-#   table2 -> mu_lambda                (mu*lambda = const => const error)
-#   table3_4 -> summary                (best configs + ImageNet analog)
-#   kernels -> kernel_bench            (kernel fallbacks + PS traffic model)
+# Differences from the legacy driver, inherited from the campaign layer:
+#   * cells whose checked-in envelope already matches their content hash are
+#     skipped (pass --force for the old always-re-run behavior);
+#   * --quick writes to benchmarks/results/quick/ instead of clobbering the
+#     checked-in full-size results (the legacy driver overwrote them).
+#
+# Old benchmark ids map 1:1 onto cell names (fig4, fig5, fig6_7, fig8,
+# table1, table2, table3_4, kernels, sim_engine, topology, elastic, serve,
+# distributed, bench_guard, baselines, ring, cnn).
 
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 
-BENCHES = [
-    ("fig4", "benchmarks.staleness_distribution"),
-    ("fig5", "benchmarks.lr_modulation"),
-    ("fig6_7", "benchmarks.tradeoff_curves"),
-    ("fig8", "benchmarks.speedup"),
-    ("table1", "benchmarks.overlap"),
-    ("table2", "benchmarks.mu_lambda"),
-    ("table3_4", "benchmarks.summary"),
-    ("kernels", "benchmarks.kernel_bench"),
-    ("sim_engine", "benchmarks.sim_engine_bench"),  # legacy loop vs compiled replay
-    ("topology", "benchmarks.topology_scaling"),  # Rudra base/adv/adv* runtime curves
-    ("elastic", "benchmarks.elastic_churn"),  # churn + backup-hardsync curves
-    ("serve", "benchmarks.train_while_serve"),  # staleness-budget serving fleet
-    ("distributed", "benchmarks.distributed_replay"),  # spmd replay on the 8-device emulated mesh
-    ("bench_guard", "benchmarks.bench_guard"),    # CI perf floor gate
-    ("baselines", "benchmarks.baselines"),   # paper sec-6 related work + sec-3.3 accrual
-    ("ring", "benchmarks.ring_feasibility"),  # what-if max-feasible-D limit study (~5 min)
-    ("cnn", "benchmarks.cnn"),               # Fig-5 on the paper's own CNN (~9 min)
-]
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="deprecated shim over `python -m "
+                    "repro.experiments.campaign paper`")
     ap.add_argument("--quick", action="store_true",
                     help="reduced epochs for CI-speed runs")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset of benchmark ids")
+                    help="comma-separated subset of cell names")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run even when the envelope is CURRENT")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
 
-    print("name,value,derived")
-    t00 = time.time()
-    for bid, module in BENCHES:
-        if only and bid not in only:
-            continue
-        if args.quick and bid in ("cnn", "ring"):
-            continue   # minutes-long cells; run explicitly or without --quick
-        mod = __import__(module, fromlist=["run"])
-        t0 = time.time()
-        kwargs = {}
-        if args.quick and bid in ("fig5", "fig6_7", "table2", "table3_4",
-                                  "baselines"):
-            kwargs = {"epochs": 3}
-        if args.quick and bid == "fig4":
-            kwargs = {"steps": 1000}
-        if args.quick and bid == "sim_engine":
-            kwargs = {"updates": 40}
-        if args.quick and bid == "distributed":
-            kwargs = {"updates": 32, "d": 1_000_000, "repeats": 2}
-        if args.quick and bid == "serve":
-            kwargs = {"epochs": 0.5, "requests": 256}
-        mod.run(**kwargs)
-        print(f"_meta/{bid}/seconds,{time.time() - t0:.1f},")
-        sys.stdout.flush()
-    print(f"_meta/total/seconds,{time.time() - t00:.1f},")
+    print("[benchmarks.run] deprecated: use `PYTHONPATH=src python -m "
+          "repro.experiments.campaign paper` (see EXPERIMENTS.md)",
+          file=sys.stderr)
+    from repro.experiments.campaign import main as campaign_main
+    argv = ["paper"]
+    if args.only:
+        argv += ["--only", args.only]
+    if args.quick:
+        argv += ["--quick"]
+    if args.force:
+        argv += ["--force"]
+    return campaign_main(argv)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

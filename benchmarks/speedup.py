@@ -1,52 +1,20 @@
-"""Paper Fig. 8: training-time speed-up vs λ for hardsync / 1-softsync /
-λ-softsync at μ = 128 and μ = 4 (calibrated runtime model).
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``fig8`` (src/repro/experiments/cells/fig8_speedup.py):
 
-Validated claims:
-  * 1-softsync ≈ λ-softsync ≥ hardsync at μ = 128;
-  * at μ = 4 the λ-softsync speed-up is subdued vs 1-softsync (PS traffic);
-  * hardsync fares worst at scale (barrier stragglers).
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only fig8
+
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit, save_json
-from repro.core import tradeoff as to
 
-LAMS = (1, 2, 4, 10, 18, 30)
-
-
-def run() -> dict:
-    hw = to.calibrate_to_baseline()
-    out = {}
-    for mu in (128, 4):
-        base = to.training_time("base", "hardsync", mu, 1, hw)
-        for proto, label in [("hardsync", "hardsync"),
-                             ("softsync", "softsync1")]:
-            for lam in LAMS:
-                t = to.training_time("base", proto, mu, lam, hw)
-                out[f"mu={mu}/{label}/lam={lam}"] = base / t
-        # λ-softsync: the PS applies one update per gradient (λ× more
-        # updates than 1-softsync) and each weight update stalls concurrent
-        # pullWeights requests — the paper's μ=4/λ=30 runtime penalty.
-        for lam in LAMS:
-            wl = to.WorkloadModel()
-            t = to.training_time("base", "softsync", mu, lam, hw, wl)
-            t_svc = wl.model_bytes / hw.ps_service_bw + 2e-3
-            penalty = 1.0 + (lam - 1) * t_svc / to.compute_time(mu, hw)
-            out[f"mu={mu}/softsyncL/lam={lam}"] = base / (t * penalty)
-    save_json("fig8_speedup", out)
-
-    s128_1 = out["mu=128/softsync1/lam=30"]
-    s128_L = out["mu=128/softsyncL/lam=30"]
-    s128_h = out["mu=128/hardsync/lam=30"]
-    emit("fig8/mu128/softsync1_speedup_30", f"{s128_1:.1f}", "")
-    emit("fig8/mu128/softsync_beats_hardsync", s128_1 > s128_h,
-         f"{s128_1:.1f}x vs {s128_h:.1f}x")
-    s4_1 = out["mu=4/softsync1/lam=30"]
-    s4_L = out["mu=4/softsyncL/lam=30"]
-    emit("fig8/mu4/lambda_softsync_subdued", s4_L < s4_1,
-         f"1-soft {s4_1:.1f}x vs L-soft {s4_L:.1f}x")
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("fig8", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

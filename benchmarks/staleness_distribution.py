@@ -1,84 +1,20 @@
-"""Paper Fig. 4: average staleness ⟨σ⟩ per update and the σ distribution.
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``fig4`` (src/repro/experiments/cells/fig4_staleness.py):
 
-Validated claims:
-  (a) 1-softsync / 2-softsync: ⟨σ⟩ stays ≈ 1 / 2; σ ∈ {0..2}/{0..4}.
-  (b) λ-softsync (λ = 30): ⟨σ⟩ ≈ 30 and P(σ > 2n) < 1e-4.
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only fig4
 
-Runs through the experiment surface in **measure mode** (DESIGN.md §5): an
-``ExperimentSpec`` with ``problem=None`` executes the schedule pass alone
-and the RunResult's ``staleness`` block carries the Fig.-4 statistics
-(⟨σ⟩, σ extremes, P(σ > 2n), ring-buffer K, histogram, ⟨σ⟩-series head).
-A second sweep exercises the beyond-paper duration models (two-speed
-heterogeneous cluster and Pareto-tail stragglers, Dutta et al.) at fixed
-(λ, n) — the scenario axis the legacy per-arrival loop was too slow for.
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit, save_results
-from repro.config import RunConfig
-from repro.experiments import ExperimentSpec, Sweep, run_sweep
 
-
-def run(steps: int = 4000) -> dict:
-    lam = 30
-    base = ExperimentSpec(
-        run=RunConfig(protocol="softsync", n_learners=lam, minibatch=128,
-                      seed=11),
-        steps=steps)
-    ns = [1, 2, 4, lam]
-    results = run_sweep(Sweep.over(base, n_softsync=ns))
-    out = {}
-    for n, res in zip(ns, results):
-        st = res.staleness
-        row = {
-            "n": n,
-            "mean_staleness": st["mean"],
-            "sigma_min": st["min"],
-            "sigma_max": st["max"],
-            "ring_buffer_K": st["ring_buffer_K"],
-            "frac_exceeding_2n": st["frac_exceeding_2n"],
-            "series_head": st["series_head"],
-            "histogram": st["histogram"],
-        }
-        out[f"softsync_{n}"] = row
-        claim = (abs(row["mean_staleness"] - n) <= max(0.6, 0.15 * n)
-                 and row["frac_exceeding_2n"] < 1e-3)
-        emit(f"fig4/softsync_n={n}/mean_staleness",
-             f"{row['mean_staleness']:.2f}",
-             f"claim<sigma>≈n:{'PASS' if claim else 'FAIL'}")
-        emit(f"fig4/softsync_n={n}/frac_sigma>2n",
-             f"{row['frac_exceeding_2n']:.5f}", "paper:<1e-4")
-
-    # ---- beyond-paper: straggler scenarios at fixed (λ, n) -----------------
-    n = 4
-    scen = Sweep.over(
-        base.replace(run=base.run.replace(n_softsync=n)),
-        cases=[
-            {"duration_model": "homogeneous", "tag": "homogeneous"},
-            {"duration_model": "two_speed", "slow_fraction": 0.25,
-             "slow_factor": 4.0, "tag": "two_speed"},
-            {"duration_model": "pareto", "pareto_alpha": 1.5,
-             "pareto_scale": 1.0, "tag": "pareto"},
-        ])
-    scen_results = run_sweep(scen)
-    for res in scen_results:
-        model = res.tag
-        st = res.staleness
-        row = {
-            "mean_staleness": st["mean"],
-            "sigma_max": st["max"],
-            "frac_exceeding_2n": st["frac_exceeding_2n"],
-            "simulated_time": res.runtime["simulated_time"],
-        }
-        out[f"scenario_{model}"] = row
-        emit(f"fig4scenario/{model}/mean_staleness",
-             f"{row['mean_staleness']:.2f}",
-             f"sigma_max={row['sigma_max']:.0f} "
-             f"time={row['simulated_time']:.0f}s")
-    save_results("fig4_staleness", records=results + scen_results,
-                 derived=out)
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("fig4", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

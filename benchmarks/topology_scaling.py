@@ -1,133 +1,21 @@
-"""Rudra-base vs adv vs adv* runtime-vs-learners curves (paper §3.2/3.3,
-Table 1 / Fig. 8 story) on the topology-aware simulator (DESIGN.md §6).
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``topology`` (src/repro/experiments/cells/topology_scaling.py):
 
-For each architecture and λ ∈ LAMBDAS, a fixed two-epoch workload in the
-paper's *adversarial* communication scenario (μ = 4, 300 MB model — the
-Table-1 setting where aggregation topology separates the architectures;
-the CIFAR CNN itself is ~350 kB and comm-invisible) is scheduled through
-the calibrated per-minibatch cost model of that architecture
-(``core/tradeoff.py``: flat-PS ingest serialization for base, PS-tree fanout
-for adv, fully-threaded overlap for adv*) with the matching structural
-topology from ``Topology.for_arch`` (sharded PS for adv, sharded PS +
-learner groups + pull skew for adv*).  The trace's event clock IS the
-runtime axis: ``simulated_time`` of the last update is the paper's
-training-time number.
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only topology
 
-A small sharded+grouped *replay* cell rides along to time the engine's
-topology path against the trivial path on identical step counts (the
-compiled-engine overhead of the vmapped per-shard ring).
-
-Results → ``benchmarks/results/topology_scaling.json`` (RunResult records
-per (arch, λ) + derived curves/speedups); surfaced by
-``benchmarks/summary.py``.
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-import time
 
-import jax.numpy as jnp
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("topology", params=kwargs or None, force=True)
 
-from benchmarks.common import emit, save_results, updates_for_epochs
-from repro.config import RunConfig
-from repro.core.topology import RUDRA_ARCHS, Topology
-from repro.experiments import ExperimentSpec
-from repro.experiments import run as run_spec
-
-LAMBDAS = (4, 16, 32, 60)
-MU = 4
-EPOCHS = 2.0
-DATASET = 50_000          # the paper's CIFAR epoch (tradeoff.WorkloadModel)
-MODEL_MB = 300            # Table-1 adversarial model size
-PULL_JITTER = 0.02
-
-
-def _spec_for(arch: str, lam: int) -> ExperimentSpec:
-    topo = Topology.for_arch(arch, lam,
-                             jitter=PULL_JITTER if arch == "adv*" else 0.0)
-    run = RunConfig(protocol="softsync", n_softsync=1, n_learners=lam,
-                    minibatch=MU, shards=topo.shards, groups=topo.groups,
-                    shard_pull_jitter=topo.pull_jitter, seed=29)
-    # fixed total work: epochs·dataset samples at c·μ·gs samples per update
-    steps = updates_for_epochs(EPOCHS, MU, run.gradients_per_update,
-                               DATASET, group_size=run.group_size)
-    return ExperimentSpec(run=run, steps=steps,
-                          duration=f"calibrated:{arch}:{MODEL_MB}mb",
-                          tag=f"{arch}/lambda={lam}")
-
-
-def _engine_overhead_cell(updates: int = 40) -> dict:
-    """Wall-clock of the sharded+grouped replay vs the trivial replay on
-    the same step count (mlp_teacher, tiny shape) — the topology path's
-    compiled-engine overhead."""
-    base = ExperimentSpec(
-        run=RunConfig(protocol="softsync", n_softsync=1, n_learners=8,
-                      minibatch=4, base_lr=0.05,
-                      lr_policy="staleness_inverse", optimizer="momentum",
-                      seed=17),
-        problem="mlp_teacher", steps=updates)
-    # shards only: identical trace shape (same c, same gradient count per
-    # event), so the delta is purely the vmapped per-shard ring path
-    star = base.replace(run=base.run.replace(shards=4,
-                                             shard_pull_jitter=0.1))
-
-    def _time(spec):
-        run_spec(spec)                               # compile
-        t0 = time.perf_counter()
-        res = run_spec(spec)
-        jnp.asarray(res.params["w1"]).block_until_ready()
-        return time.perf_counter() - t0
-
-    t_base, t_star = _time(base), _time(star)
-    return {"updates": updates, "trivial_s": t_base, "topology_s": t_star,
-            "overhead_x": t_star / t_base}
-
-
-def run_bench() -> dict:
-    records = []
-    curves = {arch: {} for arch in RUDRA_ARCHS}
-    for arch in RUDRA_ARCHS:
-        for lam in LAMBDAS:
-            spec = _spec_for(arch, lam)
-            res = run_spec(spec)
-            records.append(res)
-            seconds = res.runtime["simulated_time"]
-            curves[arch][lam] = seconds
-            emit(f"topology_scaling/{arch}/lambda={lam}/train_s",
-                 f"{seconds:.0f}",
-                 f"updates={res.runtime['updates']} "
-                 f"shards={spec.run.shards} groups={spec.run.groups} "
-                 f"<sigma>={res.staleness['mean']:.2f}")
-    speedup_vs_base = {
-        arch: {lam: curves["base"][lam] / curves[arch][lam]
-               for lam in LAMBDAS}
-        for arch in RUDRA_ARCHS}
-    lam0, lam1 = LAMBDAS[0], LAMBDAS[-1]
-    claims = {
-        # the paper's qualitative ordering at scale: base saturates on PS
-        # ingest; the sharded tree and the threaded tree keep scaling
-        "adv_faster_than_base_at_scale":
-            curves["adv"][lam1] < curves["base"][lam1],
-        "adv_star_fastest_at_scale":
-            curves["adv*"][lam1] <= curves["adv"][lam1],
-        # base's λ0→λ1 scaling falls well short of linear (ingest-bound)
-        "base_scaling_saturates":
-            curves["base"][lam0] / curves["base"][lam1] < 0.7 * lam1 / lam0,
-    }
-    overhead = _engine_overhead_cell()
-    emit("topology_scaling/engine_overhead",
-         f"{overhead['overhead_x']:.2f}x",
-         f"trivial={overhead['trivial_s']:.3f}s "
-         f"topology={overhead['topology_s']:.3f}s")
-    derived = {"lambdas": list(LAMBDAS), "mu": MU, "epochs": EPOCHS,
-               "train_seconds": curves, "speedup_vs_base": speedup_vs_base,
-               "claims": claims, "engine_overhead_cell": overhead}
-    save_results("topology_scaling", records=records, derived=derived)
-    return derived
-
-
-# benchmarks.run drives modules via their ``run`` attribute
-run = run_bench
 
 if __name__ == "__main__":
-    run_bench()
+    run()

@@ -1,71 +1,20 @@
-"""Paper Figs. 6/7: (σ, μ, λ) tradeoff curves — test error vs training time
-for hardsync / 1-softsync / λ-softsync over the (μ, λ) grid.
+"""DEPRECATED shim — this benchmark now lives in the campaign layer as
+cell ``fig6_7`` (src/repro/experiments/cells/fig6_7_tradeoff.py):
 
-Error axis: the compiled trace/replay engine driven through the experiment
-surface (``run_sweep``; protocol-faithful staleness, oracle equivalence in
-``tests/test_trace_engine.py``); time axis: the calibrated Rudra-base
-runtime model (core/tradeoff.py).  Validated qualitative claims:
-  * error grows with μλ along every contour;
-  * reducing μ at fixed λ = max restores most of the hardsync-error gap;
-  * training time falls monotonically with λ.
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only fig6_7
+
+``run(**kwargs)`` is kept so old invocations keep working; it forces a
+re-run of the cell (the legacy script always re-ran) with any kwargs
+forwarded as cell params.  The campaign CLI adds content-addressed
+caching, resume, and claim checks on top — prefer it.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit, save_results
-from repro.config import RunConfig
-from repro.core import tradeoff as to
-from repro.experiments import ExperimentSpec, get_problem, run_sweep
 
-
-def run(epochs: int = 6, base_lr: float = 0.35,
-        mus=(4, 16, 64, 128), lams=(1, 4, 10, 30)) -> dict:
-    hw = to.calibrate_to_baseline()
-    specs, meta = [], []
-    for proto, nfn in [("hardsync", lambda lam: 1),
-                       ("softsync1", lambda lam: 1),
-                       ("softsyncL", lambda lam: lam)]:
-        base = "hardsync" if proto == "hardsync" else "softsync"
-        policy = "sqrt_scale" if base == "hardsync" else "staleness_inverse"
-        for mu in mus:
-            for lam in lams:
-                if lam == 1 and proto != "hardsync":
-                    continue
-                specs.append(ExperimentSpec(
-                    run=RunConfig(protocol=base, n_softsync=nfn(lam),
-                                  n_learners=lam, minibatch=mu,
-                                  base_lr=base_lr, lr_policy=policy,
-                                  ref_batch=128, optimizer="sgd", seed=7),
-                    problem="mlp_teacher", epochs=epochs,
-                    tag=f"{proto}/mu={mu}/lam={lam}"))
-                meta.append((proto, base, mu, lam))
-    results = run_sweep(specs)
-
-    out = {}
-    wl = to.WorkloadModel(dataset_size=get_problem("mlp_teacher").dataset_size,
-                          epochs=epochs)
-    for (proto, base, mu, lam), res in zip(meta, results):
-        t = to.training_time("base", base, mu, lam, hw, wl)
-        out[res.tag] = {"test_error": res.metrics["test_error"],
-                        "train_time_s": t, "mu_lambda": mu * lam}
-
-    # ---- claims -----------------------------------------------------------
-    # error grows with μλ (compare smallest vs largest product, hardsync)
-    small = out["hardsync/mu=4/lam=1"]["test_error"]
-    large = out["hardsync/mu=128/lam=30"]["test_error"]
-    emit("fig6/error_grows_with_mu_lambda", large > small,
-         f"{small:.3f}->{large:.3f}")
-    # reducing μ at λ=30 restores error (softsync λ-protocol)
-    e_big = out["softsyncL/mu=128/lam=30"]["test_error"]
-    e_small = out["softsyncL/mu=4/lam=30"]["test_error"]
-    emit("fig7/small_mu_restores_error", e_small < e_big,
-         f"mu128:{e_big:.3f} mu4:{e_small:.3f}")
-    # time monotone in λ
-    t1 = out["hardsync/mu=128/lam=1"]["train_time_s"]
-    t30 = out["hardsync/mu=128/lam=30"]["train_time_s"]
-    emit("fig6/time_falls_with_lambda", t30 < t1, f"{t1:.0f}s->{t30:.0f}s")
-    save_results("fig6_7_tradeoff", records=results, derived=out)
-    return out
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("fig6_7", params=kwargs or None, force=True)
 
 
 if __name__ == "__main__":

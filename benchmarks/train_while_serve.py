@@ -1,227 +1,22 @@
-"""Train-while-serve on the calibrated Table-1 workload (DESIGN.md §14):
-serving accuracy × staleness budget × tail latency, under replica churn.
+"""DEPRECATED shim — the train-while-serve benchmark now lives in the
+campaign layer as cell ``serve``
+(src/repro/experiments/cells/train_while_serve.py):
 
-The tradeoff the publication subsystem exists to measure: a serving fleet
-refreshed from the PS weight ring under a ``staleness`` budget B sees
-weights at most B versions old, so
+    PYTHONPATH=src python -m repro.experiments.campaign paper --only serve
 
-* tight B  → requests score near the live training accuracy, but every
-  refresh blocks the replica for ``publish_cost_s`` — more refreshes,
-  fatter latency tail;
-* loose B  → few refreshes and a clean tail, but requests are answered by
-  stale weights and the mean serving accuracy drops toward the curve from
-  B updates ago.
-
-Scenarios: staleness budgets B ∈ {1, 4, 16, 64} on a 2-replica fleet, the
-``on_demand`` policy (freshest possible: every read pays the publication),
-and a replica crash-restart window on the B = 4 fleet.  All on the paper's
-Table-1 adversarial setting (1-softsync, λ = 16, μ = 4, 300 MB calibrated
-runtime), multi-seed.  Training is bitwise-independent of the fleet
-(pinned in ``tests/test_publication.py``), so every scenario shares one
-accuracy trajectory per seed — the benchmark asserts that too.
-
-Results land in ``benchmarks/results/train_while_serve.json`` (RunResult
-records + derived claims), surfaced by ``benchmarks/summary.py``; the
-``measure()`` cell feeds the ``serving_requests_per_s`` CI floor in
-``benchmarks/bench_guard.py``.
+``measure`` (the bench-guard serving-throughput probe) is re-exported for
+existing importers; new code should import from the cells module.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
-from benchmarks.common import emit, save_results, updates_for_epochs
-from repro.config import RunConfig
-from repro.experiments import ExperimentSpec, Sweep, run_sweep
-from repro.experiments import run as run_spec
-from repro.serve.fleet import FleetConfig
-from repro.serve.publication import PublicationPolicy
-
-LAM = 16
-MU = 4
-EPOCHS = 2.0
-MODEL_MB = 300            # Table-1 adversarial model size
-DURATION = f"calibrated:base:{MODEL_MB}mb"
-SEEDS = (0, 1, 2)
-BUDGETS = (1, 4, 16, 64)
-REQUESTS = 1024           # per scenario cell (rate sized to the horizon)
-REQUEST_SAMPLES = 32
+from repro.experiments.cells.train_while_serve import measure  # noqa: F401
 
 
-def _steps(run_cfg: RunConfig, epochs: float) -> int:
-    from repro.experiments import get_problem
-    dataset = get_problem("mlp_teacher").dataset_size
-    return updates_for_epochs(epochs, MU, run_cfg.gradients_per_update,
-                              dataset, group_size=run_cfg.group_size)
+def run(**kwargs) -> None:
+    from repro.experiments.campaign import run_cell
+    run_cell("serve", params=kwargs or None, force=True)
 
-
-def _fleet(horizon: float, requests: int, policy: PublicationPolicy,
-           membership=()) -> FleetConfig:
-    """Fleet sized to the calibrated horizon: traffic covers the whole run,
-    a publication blocks ~H/640 (visible at B = 1 where refreshes are per
-    update, negligible at B = 64), service times keep the queue subcritical
-    so p99 reflects publication stalls, not saturation."""
-    return FleetConfig(replicas=2, policy=policy,
-                       request_rate=requests / horizon,
-                       request_samples=REQUEST_SAMPLES,
-                       publish_cost_s=horizon / 640.0,
-                       service_base_s=2.5e-4 * horizon,
-                       service_per_sample_s=1e-6 * horizon,
-                       membership=membership)
-
-
-def _stats(rows) -> dict:
-    acc = [r.metrics["serving_accuracy"] for r in rows]
-    errs = [r.metrics["test_error"] for r in rows]
-    summaries = [r.runtime["serving"] for r in rows]
-    return {
-        "serving_accuracy_mean": float(np.mean(acc)),
-        "serving_accuracy_std": float(np.std(acc)),
-        "test_errors": [float(e) for e in errs],
-        "staleness_mean": float(np.mean(
-            [s["staleness_mean"] for s in summaries])),
-        "staleness_max": int(max(s["staleness_max"] for s in summaries)),
-        "latency_p50_s": float(np.mean(
-            [s["latency_p50_s"] for s in summaries])),
-        "latency_p99_s": float(np.mean(
-            [s["latency_p99_s"] for s in summaries])),
-        "refreshes_mean": float(np.mean(
-            [s["n_refreshes"] for s in summaries])),
-        "n_dropped": int(sum(s["n_dropped"] for s in summaries)),
-    }
-
-
-def run_bench(epochs: float = EPOCHS, requests: int = REQUESTS) -> dict:
-    soft = RunConfig(protocol="softsync", n_softsync=1, n_learners=LAM,
-                     minibatch=MU, base_lr=0.05,
-                     lr_policy="staleness_inverse", optimizer="momentum")
-    steps = _steps(soft, epochs)
-    # horizon for traffic/churn sizing: a dry (measure-mode) schedule
-    dry = run_spec(ExperimentSpec(run=soft, steps=steps, duration=DURATION))
-    horizon = dry.runtime["simulated_time"]
-
-    def spec(fleet: FleetConfig, tag: str) -> ExperimentSpec:
-        return ExperimentSpec(run=soft.replace(serving=fleet),
-                              problem="mlp_teacher", steps=steps,
-                              duration=DURATION, tag=tag)
-
-    churn = ((0.30 * horizon, 1, "crash"), (0.55 * horizon, 1, "join"))
-    scenarios = {
-        **{f"budget{b}": spec(_fleet(horizon, requests,
-                                     PublicationPolicy(max_version_lag=b)),
-                              f"budget{b}")
-           for b in BUDGETS},
-        "on_demand": spec(_fleet(horizon, requests,
-                                 PublicationPolicy(kind="on_demand")),
-                          "on_demand"),
-        "budget4_churn": spec(_fleet(horizon, requests,
-                                     PublicationPolicy(max_version_lag=4),
-                                     membership=churn),
-                              "budget4_churn"),
-    }
-
-    records, stats = [], {}
-    for name, sp in scenarios.items():
-        rows = run_sweep(Sweep.over(sp, seed=SEEDS))
-        records.extend(rows)
-        stats[name] = _stats(rows)
-        emit(f"train_while_serve/{name}",
-             f"acc={stats[name]['serving_accuracy_mean']:.4f}",
-             f"stale={stats[name]['staleness_mean']:.1f} "
-             f"p99={stats[name]['latency_p99_s']:.2f}s "
-             f"refreshes={stats[name]['refreshes_mean']:.0f}")
-
-    acc = {b: stats[f"budget{b}"]["serving_accuracy_mean"] for b in BUDGETS}
-    p99 = {b: stats[f"budget{b}"]["latency_p99_s"] for b in BUDGETS}
-    ref = {b: stats[f"budget{b}"]["refreshes_mean"] for b in BUDGETS}
-    noise = max(max(stats[f"budget{b}"]["serving_accuracy_std"]
-                    for b in BUDGETS), 1e-3)
-    pairs = list(zip(BUDGETS, BUDGETS[1:]))
-    claims = {
-        # the accuracy-vs-budget tradeoff, monotone along the budget axis:
-        # every tightening of B buys serving accuracy (within the seed
-        # band), and the endpoints are separated beyond it
-        "accuracy_monotone_in_budget":
-            all(acc[a] >= acc[b] - noise for a, b in pairs)
-            and acc[BUDGETS[0]] > acc[BUDGETS[-1]] + noise,
-        # what freshness costs: tighter budgets refresh strictly more and
-        # the publication stalls surface in the tail
-        "refreshes_strictly_decreasing":
-            all(ref[a] > ref[b] for a, b in pairs),
-        "fresh_serving_pays_latency":
-            p99[BUDGETS[0]] > p99[BUDGETS[-1]],
-        # on_demand is the freshness ceiling: zero version lag, accuracy
-        # at or above the tightest scheduled budget
-        "on_demand_is_freshest":
-            stats["on_demand"]["staleness_mean"] == 0.0
-            and (stats["on_demand"]["serving_accuracy_mean"]
-                 >= acc[BUDGETS[0]] - noise),
-        # budgets hold under replica churn (the restart re-publishes before
-        # serving again), and the surviving replica keeps the fleet up
-        "budget_holds_under_churn":
-            stats["budget4_churn"]["staleness_max"] <= 4
-            and stats["budget4_churn"]["n_dropped"] == 0,
-        # training is bitwise-independent of the fleet: one test-error
-        # trajectory per seed across every scenario (exact equality)
-        "training_unperturbed_by_serving":
-            all(s["test_errors"] == stats["budget1"]["test_errors"]
-                for s in stats.values()),
-    }
-    for k, v in claims.items():
-        emit(f"train_while_serve/claims/{k}", v)
-
-    derived = {
-        "lambda": LAM, "mu": MU, "epochs": epochs, "model_mb": MODEL_MB,
-        "seeds": list(SEEDS), "budgets": list(BUDGETS),
-        "updates": steps, "horizon_s": horizon, "requests": requests,
-        "scenarios": stats, "claims": claims, "noise_band": noise,
-    }
-    save_results("train_while_serve", records=records, derived=derived)
-    return derived
-
-
-def measure(updates: int = 48, requests: int = 1024,
-            repeats: int = 3) -> dict:
-    """The bench-guard cell: wall-clock throughput of the serving lane
-    (snapshot capture in the scan + the chunked vmapped request
-    evaluation), requests sized to dominate the tiny training replay.
-    Absolute, so the CI floor carries a wide margin."""
-    import time
-
-    from repro.core.engine import replay
-    from repro.core.trace import schedule
-    from repro.experiments import get_problem
-
-    prob = get_problem("mlp_teacher")
-    base = RunConfig(protocol="softsync", n_softsync=1, n_learners=16,
-                     minibatch=4, base_lr=0.05,
-                     lr_policy="staleness_inverse", optimizer="momentum",
-                     seed=17)
-    horizon = schedule(base, updates).simulated_time
-    cfg = base.replace(serving=FleetConfig(
-        replicas=2, policy=PublicationPolicy(max_version_lag=4),
-        request_rate=requests / horizon, request_samples=32))
-    trace = schedule(cfg, updates)
-    batches = prob.stage_requests(trace.serving, cfg.serving, seed=cfg.seed)
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        sim = replay(trace, cfg, grad_fn=prob.grad_fn,
-                     init_params=prob.init,
-                     batch_fn=prob.batch_fn_for(cfg.minibatch),
-                     serve_batches=batches,
-                     serve_eval_fn=prob.request_metric)
-        assert sim.serving.request_metric.shape[0] == trace.serving.n_requests
-        best = min(best, time.perf_counter() - t0)
-    n = trace.serving.n_requests
-    return {"updates": updates, "requests": n, "seconds": best,
-            "requests_per_s": n / best}
-
-
-# benchmarks.run drives modules via their ``run`` attribute
-run = run_bench
 
 if __name__ == "__main__":
-    run_bench()
+    run()

@@ -17,10 +17,21 @@
 
 Everything a run produces lands in the RunResult record (config echo,
 final/curve metrics, trace-derived runtime axis, staleness statistics,
-JSON round-trip) — the schema shared by ``benchmarks/results/*.json``.
+JSON round-trip, content-addressed ``spec_hash``) — the schema shared by
+``benchmarks/results/*.json``.
+
+On top sits the campaign layer (DESIGN.md §15): every paper table/figure is
+a registered ``Cell`` (a named spec-graph + derive + claims), executed,
+cached, and resumed by content address:
+
+    PYTHONPATH=src python -m repro.experiments.campaign paper --dry-run
+    from repro.experiments import run_cell
+    derived = run_cell("fig4")
 """
 
 from repro.experiments.driver import execute, run, run_sweep
+from repro.experiments.spec_hash import (content_hash, spec_hash,
+                                         spec_hash_from_echo)
 from repro.experiments.problems import (MLPProblem, get_problem,
                                         problem_names, register_problem,
                                         updates_for_epochs)
@@ -34,4 +45,20 @@ __all__ = [
     "MLPProblem", "register_problem", "get_problem", "problem_names",
     "updates_for_epochs",
     "SCHEMA_VERSION", "envelope", "validate_record", "validate_results_file",
+    "content_hash", "spec_hash", "spec_hash_from_echo",
+    "Cell", "Claim", "get_cell", "cells_in", "run_cell", "run_campaign",
 ]
+
+
+def __getattr__(name):
+    # campaign/registry symbols resolve lazily: registry._load_cells()
+    # imports every cells/ module, and eager import here would make
+    # ``import repro.experiments`` pull the whole cell graph in.
+    if name in ("Cell", "Claim", "get_cell", "cells_in", "register_cell",
+                "cell_hash", "cell_for_result"):
+        import repro.experiments.registry as _registry
+        return getattr(_registry, name)
+    if name in ("run_cell", "run_campaign", "cell_status"):
+        import repro.experiments.campaign as _campaign
+        return getattr(_campaign, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

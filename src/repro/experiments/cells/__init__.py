@@ -1,0 +1,18 @@
+"""Campaign cells: one module per paper table/figure (DESIGN.md §15).
+
+Importing this package registers every cell with
+``repro.experiments.registry``; the campaign CLI
+(``python -m repro.experiments.campaign``) resolves them into a DAG.
+The deprecated ``benchmarks/*.py`` entry points are thin shims over
+these modules.
+"""
+
+from repro.experiments.cells import (baselines, bench_guard,  # noqa: F401
+                                     cnn_fig5, distributed_replay,
+                                     elastic_churn, fig4_staleness,
+                                     fig5_lr_modulation, fig6_7_tradeoff,
+                                     fig8_speedup, kernel_bench,
+                                     ring_feasibility, sim_engine_bench,
+                                     smoke_cells, table1_overlap,
+                                     table2_mu_lambda, table3_4_summary,
+                                     topology_scaling, train_while_serve)

@@ -212,10 +212,15 @@ _REGISTRY: Dict[str, Callable] = {}
 _CACHE: Dict[Tuple, object] = {}
 
 
-def register_problem(name: str, factory: Callable) -> None:
+def register_problem(name: str, factory: Callable, version: int = 1) -> None:
     """Register ``factory(**kwargs) -> problem`` under ``name``.  The factory
     result must expose init / grad_fn / batch_fn_for / eval_fn /
-    dataset_size (see module docstring)."""
+    dataset_size (see module docstring).  ``version`` is the problem's
+    content identity for spec hashing (DESIGN.md §15): bump it when the
+    problem's semantics change and every cached result that used it goes
+    stale."""
+    from repro.experiments.spec_hash import register_problem_version
+    register_problem_version(name, version)
     _REGISTRY[name] = factory
 
 

@@ -1,100 +1,20 @@
-"""Dry-run campaign driver: all (arch × shape) × {main 16x16, main 2x16x16,
-probe 16x16} as parallel subprocesses; results land in
-benchmarks/results/dryrun/<job>.json.
+"""DEPRECATED alias — renamed to ``repro.launch.dryrun_campaign`` to free
+the ``campaign`` name for the experiments campaign layer (DESIGN.md §15):
 
-    PYTHONPATH=src python -m repro.launch.campaign [--workers 5] [--modes ...]
+    PYTHONPATH=src python -m repro.launch.dryrun_campaign
 
-Each job is its own process so the 512-device XLA flag stays contained and
-compiles run truly in parallel.
+Importing from here keeps working; ``python -m repro.launch.campaign`` too.
 """
 
 from __future__ import annotations
 
-import argparse
-import itertools
-import json
-import os
-import subprocess
 import sys
-import time
-from concurrent.futures import ThreadPoolExecutor, as_completed
 
-ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
-    os.path.dirname(os.path.abspath(__file__)))))
-OUT_DIR = os.path.join(ROOT, "benchmarks", "results", "dryrun")
-
-ARCHS = ["internvl2_2b", "hubert_xlarge", "rwkv6_7b", "qwen3_14b",
-         "starcoder2_7b", "zamba2_7b", "llama4_maverick_400b_a17b",
-         "qwen2_1_5b", "llama3_405b", "arctic_480b"]
-SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
-
-
-def job_id(arch, shape, mode, multi):
-    mesh = "2x16x16" if multi else "16x16"
-    return f"{arch}__{shape}__{mode}__{mesh}"
-
-
-def run_job(arch, shape, mode, multi, timeout):
-    jid = job_id(arch, shape, mode, multi)
-    out_json = os.path.join(OUT_DIR, jid + ".json")
-    if os.path.exists(out_json):
-        return jid, "cached"
-    cmd = [sys.executable, "-m", "repro.launch.dryrun",
-           "--arch", arch.replace("_", "-"), "--shape", shape,
-           "--mode", mode, "--json", out_json]
-    if multi:
-        cmd.append("--multi-pod")
-    if mode == "probe":
-        cmd += ["--q-chunk", "4096", "--kv-chunk", "4096"]
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    t0 = time.time()
-    try:
-        p = subprocess.run(cmd, capture_output=True, text=True,
-                           timeout=timeout, env=env)
-        status = "ok" if p.returncode == 0 else "fail"
-        if status == "fail":
-            with open(out_json + ".err", "w") as f:
-                f.write(p.stdout[-4000:] + "\n---\n" + p.stderr[-6000:])
-    except subprocess.TimeoutExpired:
-        status = "timeout"
-        with open(out_json + ".err", "w") as f:
-            f.write(f"timeout after {timeout}s")
-    return jid, f"{status} ({time.time() - t0:.0f}s)"
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--workers", type=int, default=5)
-    ap.add_argument("--timeout", type=int, default=2400)
-    ap.add_argument("--modes", default="main,multi,probe")
-    ap.add_argument("--archs", default=",".join(ARCHS))
-    ap.add_argument("--shapes", default=",".join(SHAPES))
-    args = ap.parse_args()
-    os.makedirs(OUT_DIR, exist_ok=True)
-
-    modes = args.modes.split(",")
-    jobs = []
-    for arch in args.archs.split(","):
-        for shape in args.shapes.split(","):
-            if "main" in modes:
-                jobs.append((arch, shape, "main", False))
-            if "multi" in modes:
-                jobs.append((arch, shape, "main", True))
-            if "probe" in modes:
-                jobs.append((arch, shape, "probe", False))
-
-    t0 = time.time()
-    done = 0
-    with ThreadPoolExecutor(max_workers=args.workers) as ex:
-        futs = {ex.submit(run_job, *j, args.timeout): j for j in jobs}
-        for fut in as_completed(futs):
-            jid, status = fut.result()
-            done += 1
-            print(f"[{done}/{len(jobs)} {time.time()-t0:.0f}s] {jid}: "
-                  f"{status}", flush=True)
-    print(f"campaign done in {time.time()-t0:.0f}s")
-
+from repro.launch.dryrun_campaign import (ARCHS, OUT_DIR,  # noqa: F401
+                                          ROOT, SHAPES, job_hash, job_id,
+                                          job_spec, main, run_job)
 
 if __name__ == "__main__":
+    print("[launch.campaign] deprecated: use `python -m "
+          "repro.launch.dryrun_campaign`", file=sys.stderr)
     main()
